@@ -1,0 +1,40 @@
+"""Paper Figure 4 (bottom) + App. B.2: generation time, SO vs MO, and the
+Pallas tree-inference kernel vs the XLA reference (interpret mode = CPU
+correctness; the timing signal of interest is SO-vs-MO ensemble count).
+
+CSV: name,us_per_call,derived (derived = ms per generated datapoint).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ForestConfig
+from repro.core.forest_flow import ForestGenerativeModel
+from repro.data.tabular import synthetic_resource_dataset
+
+
+def main(quick: bool = True) -> None:
+    n, n_y = (500, 2) if quick else (2000, 5)
+    for p in (4, 16) if quick else (10, 30, 100):
+        X, y = synthetic_resource_dataset(n, p, n_y, seed=0)
+        for mo in (False, True):
+            fcfg = ForestConfig(n_t=6, duplicate_k=5, n_trees=10, max_depth=4,
+                                n_bins=32, reg_lambda=1.0, multi_output=mo)
+            model = ForestGenerativeModel(fcfg).fit(X, y, seed=0)
+            # warm-up compile, then measure steady-state generation
+            model.generate(n, seed=1)
+            t0 = time.time()
+            reps = 3
+            for r in range(reps):
+                model.generate(n, seed=2 + r)
+            dt = (time.time() - t0) / reps
+            name = "MO" if mo else "SO"
+            emit(f"generation/{name}/p={p}", f"{dt * 1e6:.0f}",
+                 f"ms_per_point={1000 * dt / n:.4f}")
+
+
+if __name__ == "__main__":
+    main()

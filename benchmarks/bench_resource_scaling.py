@@ -1,0 +1,61 @@
+"""Paper Figure 1 / Figure 2 / Figure 4 (top+middle): training time and peak
+memory, Original-style implementation vs ours (SO, MO, +ES), scaling in n.
+
+Each configuration runs in a fresh subprocess so peak RSS is per-config.
+CSV: name,us_per_call,derived  (derived = peak RSS in MiB).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_measured
+
+_FIT_SNIPPET = """
+import numpy as np
+from repro.config import ForestConfig
+from repro.data.tabular import synthetic_resource_dataset
+{import_line}
+X, y = synthetic_resource_dataset({n}, {p}, {n_y}, seed=0)
+fcfg = ForestConfig(n_t={n_t}, duplicate_k={K}, n_trees={T}, max_depth=4,
+                    n_bins=32, reg_lambda=1.0, multi_output={mo},
+                    early_stop_rounds={es})
+m = {ctor}(fcfg).fit(X, y, seed=0)
+result = {{}}
+"""
+
+
+def variants():
+    ours = ("from repro.core.forest_flow import ForestGenerativeModel",
+            "ForestGenerativeModel")
+    naive = ("from repro.core.naive import NaiveForestGenerativeModel",
+             "NaiveForestGenerativeModel")
+    return [
+        ("original", naive, False, 0),
+        ("ours-SO", ours, False, 0),
+        ("ours-MO", ours, True, 0),
+        ("ours-SO-ES", ours, False, 5),
+        ("ours-MO-ES", ours, True, 5),
+    ]
+
+
+def main(sizes=(200, 500, 1000), p=8, n_y=2, n_t=3, K=10, T=10) -> None:
+    for n in sizes:
+        for name, (imp, ctor), mo, es in variants():
+            if name == "original" and n > 500:
+                # the pathological baseline becomes impractical quickly —
+                # the paper's red-cross regime; don't burn the CI budget
+                emit(f"resource_scaling/{name}/n={n}", "skipped(x)",
+                     "skipped(x)")
+                continue
+            snippet = _FIT_SNIPPET.format(import_line=imp, ctor=ctor, n=n,
+                                          p=p, n_y=n_y, n_t=n_t, K=K, T=T,
+                                          mo=mo, es=es)
+            res = run_measured(snippet, timeout=1200)
+            if res.get("error"):
+                emit(f"resource_scaling/{name}/n={n}", "fail", "fail")
+                continue
+            us = res["wall_s"] * 1e6
+            mib = res["peak_rss_bytes"] / 2 ** 20
+            emit(f"resource_scaling/{name}/n={n}", f"{us:.0f}", f"{mib:.1f}")
+
+
+if __name__ == "__main__":
+    main()

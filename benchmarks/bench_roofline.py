@@ -1,0 +1,45 @@
+"""Roofline table: reads the dry-run artifacts (experiments/dryrun/*.json)
+and prints the per-(arch x shape x mesh) three-term roofline.
+
+CSV: name,us_per_call,derived where us_per_call = bound step time in us and
+derived = "dom=..|mfu=..|tc=..|tm=..|tx=..".
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+
+def main(dryrun_dir: str = "experiments/dryrun") -> None:
+    d = Path(dryrun_dir)
+    files = sorted(d.glob("*.json")) if d.exists() else []
+    if not files:
+        emit("roofline/NO_ARTIFACTS", "-",
+             "run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    for f in files:
+        rec = json.loads(f.read_text())
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("tag"):
+            name += f"/{rec['tag']}"
+        if rec["status"] == "skipped":
+            emit(name, "-", "skipped(long-context-full-attention)")
+            continue
+        if rec["status"] != "ok":
+            emit(name, "fail", rec.get("error", "")[:80])
+            continue
+        r = rec.get("roofline")
+        if not r:
+            emit(name, "-", rec.get("note", "ok")[:80])
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(name, f"{bound * 1e6:.0f}",
+             f"dom={r['dominant']}|mfu={r['mfu_bound']:.3f}"
+             f"|tc={r['t_compute_s']:.2e}|tm={r['t_memory_s']:.2e}"
+             f"|tx={r['t_collective_s']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

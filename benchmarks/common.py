@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: subprocess peak-RSS measurement + CSV output."""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import time
+
+
+def run_measured(snippet: str, timeout: int = 900) -> dict:
+    """Run a python snippet in a subprocess; returns its printed JSON plus
+    wall time and peak RSS (KiB->bytes). Each config gets a clean process so
+    peak memory is per-config (ru_maxrss is monotonic within a process)."""
+    wrapper = (
+        "import resource, json, time\n"
+        "t0 = time.time()\n"
+        + snippet + "\n"
+        "out = dict(result if isinstance(result, dict) else {})\n"
+        "out['wall_s'] = time.time() - t0\n"
+        "out['peak_rss_bytes'] = "
+        "resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024\n"
+        "print('\\n@@RESULT@@' + json.dumps(out))\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", wrapper],
+                          capture_output=True, text=True, timeout=timeout,
+                          env={"PYTHONPATH": "src", "HOME": "/root",
+                               "PATH": "/usr/bin:/bin"})
+    if proc.returncode != 0:
+        return {"error": proc.stderr[-1500:], "wall_s": None,
+                "peak_rss_bytes": None}
+    for line in proc.stdout.splitlines():
+        if line.startswith("@@RESULT@@"):
+            return json.loads(line[len("@@RESULT@@"):])
+    return {"error": "no result line", "wall_s": None, "peak_rss_bytes": None}
+
+
+def emit(name: str, us_per_call, derived):
+    print(f"{name},{us_per_call},{derived}", flush=True)

@@ -1,0 +1,53 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  resource_scaling  - Fig. 1 / 2 / 4 (top+middle): time+memory vs n
+  quality           - Table 2 / 7: W1 + coverage + mean rank, 7 methods
+  calo              - Table 3/4/5: chi^2 separation + classifier AUC
+  generation        - Fig. 4 (bottom): SO vs MO generation time
+  ablation          - Fig. 3 / 10 / 11: early stopping + K/n_tree sweeps
+  roofline          - dry-run roofline table (scale deliverable)
+
+Full-size variants are driven by the flags below; defaults are sized for the
+CPU CI budget.
+"""
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of sections")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized settings (hours on CPU)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_ablations, bench_calo, bench_generation,
+                            bench_quality, bench_resource_scaling,
+                            bench_roofline)
+    sections = {
+        "resource_scaling": lambda: bench_resource_scaling.main(
+            sizes=(200, 500, 1000) if quick else (1000, 3000, 10000)),
+        "quality": lambda: bench_quality.main(quick=quick),
+        "calo": lambda: bench_calo.main(quick=quick,
+                                        n=1500 if quick else 120000),
+        "generation": lambda: bench_generation.main(quick=quick),
+        "ablation": lambda: bench_ablations.main(quick=quick),
+        "roofline": lambda: bench_roofline.main(),
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        try:
+            sections[name]()
+        except Exception:  # keep the harness going; report the failure
+            print(f"{name},fail,{traceback.format_exc().splitlines()[-1]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end CaloForest pipeline (the paper's §4.3 application):
+
+  data -> per-class scaling -> ForestFlow(MO) with checkpoint streaming ->
+  generation -> CaloChallenge metrics (chi^2 separation powers + AUC).
+
+    PYTHONPATH=src python examples/calorimeter_pipeline.py [--full]
+
+--full uses the real schema sizes (p=368, 15 classes; hours on CPU).
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.config import ForestConfig
+from repro.core.forest_flow import ForestGenerativeModel
+from repro.data import calorimeter as calo
+from repro.eval import metrics as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    dataset = "photons" if args.full else "photons_mini"
+    n = 120000 if args.full else 1200
+
+    X, y = calo.generate(dataset, n, seed=0)
+    Xte, _ = calo.generate(dataset, n, seed=1)
+    if not args.full:
+        y = y % 5
+    print(f"dataset={dataset} n={n} p={X.shape[1]} classes={len(set(y))}")
+
+    fcfg = ForestConfig(
+        method="flow",
+        n_t=100 if args.full else 5,
+        duplicate_k=20 if args.full else 4,
+        n_trees=20 if args.full else 10,
+        max_depth=7 if args.full else 4,
+        learning_rate=1.5 if args.full else 0.5,
+        n_bins=64 if args.full else 32,
+        reg_lambda=1.0, multi_output=True)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        print("training CaloForest (checkpoints stream to disk;"
+              " rerun with resume=True restarts after failure)...")
+        model = ForestGenerativeModel(fcfg).fit(
+            X, y, seed=0, checkpoint_dir=ckpt_dir)
+        G, _ = model.generate(n, seed=2)
+
+    f_real = calo.high_level_features(Xte, dataset)
+    f_gen = calo.high_level_features(G, dataset)
+    print("chi^2 separation powers (lower is better):")
+    for k in sorted(f_real):
+        print(f"  {k:16s} {calo.chi2_separation(f_real[k], f_gen[k]):.4f}")
+    print(f"classifier AUC: {M.classifier_auc(Xte, G):.4f}"
+          " (0.5 = indistinguishable)")
+
+
+if __name__ == "__main__":
+    main()

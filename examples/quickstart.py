@@ -1,0 +1,36 @@
+"""Quickstart: train ForestFlow on two-moons, generate, evaluate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.config import ForestConfig
+from repro.core.forest_flow import ForestGenerativeModel
+from repro.data.tabular import two_moons
+from repro.eval import metrics as M
+
+
+def main():
+    X, y = two_moons(600, seed=0)
+    tr, te = X[:480], X[480:]
+    ytr = y[:480]
+
+    fcfg = ForestConfig(method="flow", n_t=10, duplicate_k=20, n_trees=40,
+                        max_depth=4, n_bins=32, reg_lambda=1.0,
+                        early_stop_rounds=5)
+    print("fitting ForestFlow (SO + early stopping)...")
+    model = ForestGenerativeModel(fcfg).fit(tr, ytr, seed=0)
+    print("trees kept per timestep:",
+          np.round(model.trees_at_best_iteration(), 1))
+
+    G, yg = model.generate(480, seed=1)
+    print(f"generated {G.shape[0]} samples")
+    print(f"  sliced-W1 to train: {M.sliced_w1(G, tr):.4f}")
+    print(f"  sliced-W1 to test:  {M.sliced_w1(G, te):.4f}")
+    print(f"  coverage of test:   {M.coverage(G, te, k=3):.3f}")
+    print(f"  two-sample AUC:     {M.classifier_auc(te, G):.3f} "
+          "(0.5 = indistinguishable)")
+
+
+if __name__ == "__main__":
+    main()

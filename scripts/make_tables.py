@@ -1,0 +1,89 @@
+"""Generate EXPERIMENTS.md tables from the dry-run artifacts."""
+import json
+import sys
+from pathlib import Path
+
+ARCH_ORDER = ["dbrx-132b", "deepseek-v2-236b", "llava-next-34b",
+              "smollm-135m", "phi4-mini-3.8b", "granite-3-8b", "stablelm-12b",
+              "whisper-tiny", "xlstm-1.3b", "recurrentgemma-9b", "caloforest"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "photons", "pions"]
+
+
+def load(d):
+    recs = {}
+    for f in Path(d).glob("*.json"):
+        r = json.loads(f.read_text())
+        key = (r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+        recs[key] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}GiB"
+
+
+def roofline_table(recs):
+    print("| arch | shape | mesh | status | peak B/dev | t_comp (s) | "
+          "t_mem (s) | t_coll (s) | dominant | MODEL/HLO | mfu_bound |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((arch, shape, mesh, ""))
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    print(f"| {arch} | {shape} | {mesh} | skipped "
+                          f"(full-attn @500k) | - | - | - | - | - | - | - |")
+                    continue
+                if r["status"] != "ok":
+                    print(f"| {arch} | {shape} | {mesh} | FAILED | - | - |"
+                          " - | - | - | - | - |")
+                    continue
+                ro = r.get("roofline", {})
+                mem = r.get("memory_analysis", {})
+                peak = mem.get("peak_bytes_per_device")
+                print(f"| {arch} | {shape} | {mesh} | ok | {fmt_bytes(peak)} "
+                      f"| {ro.get('t_compute_s', 0):.2e} "
+                      f"| {ro.get('t_memory_s', 0):.2e} "
+                      f"| {ro.get('t_collective_s', 0):.2e} "
+                      f"| {ro.get('dominant', '-')} "
+                      f"| {ro.get('useful_flops_ratio', 0):.3f} "
+                      f"| {ro.get('mfu_bound', 0):.3f} |")
+
+
+def perf_table(recs):
+    cells = [
+        ("deepseek-v2-236b", "decode_32k", ["", "absorb", "absorb_w8"]),
+        ("smollm-135m", "train_4k",
+         ["", "packed", "packed_dots", "packed_dots_dp"]),
+        ("caloforest", "pions", ["", "rs", "rs_bf16", "rs_bf16_int8"]),
+    ]
+    print("| cell | variant | t_comp | t_mem | t_coll | dominant |"
+          " mfu_bound |")
+    print("|---|---|---|---|---|---|---|")
+    for arch, shape, tags in cells:
+        for tag in tags:
+            r = recs.get((arch, shape, "16x16", tag))
+            if r is None or r.get("status") != "ok":
+                print(f"| {arch}/{shape} | {tag or 'baseline'} | ? | ? | ? |"
+                      " ? | ? |")
+                continue
+            ro = r["roofline"]
+            print(f"| {arch}/{shape} | {tag or 'baseline'} "
+                  f"| {ro['t_compute_s']:.2e} | {ro['t_memory_s']:.2e} "
+                  f"| {ro['t_collective_s']:.2e} | {ro['dominant']} "
+                  f"| {ro['mfu_bound']:.3f} |")
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    which = sys.argv[2] if len(sys.argv) > 2 else "all"
+    if which in ("all", "roofline"):
+        roofline_table(recs)
+        print()
+    if which in ("all", "perf"):
+        perf_table(recs)

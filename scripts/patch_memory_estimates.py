@@ -1,0 +1,31 @@
+"""Add analytic per-chip memory estimates to existing dry-run artifacts
+(no recompiles needed; derived from configs only)."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+from repro.analysis.flops import chip_memory_estimate  # noqa: E402
+from repro.config import SHAPES_BY_NAME  # noqa: E402
+from repro.configs import get_arch  # noqa: E402
+
+
+def main(d="experiments/dryrun"):
+    for f in Path(d).glob("*.json"):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok" or r["arch"] == "caloforest":
+            continue
+        cfg = get_arch(r["arch"])
+        shape = SHAPES_BY_NAME[r["shape"]]
+        est = chip_memory_estimate(
+            cfg, shape, chips=r.get("chips", 256),
+            remat_policy=r.get("remat", "full"),
+            moe_w8=("w8" in r.get("tag", "")))
+        r["chip_memory_estimate"] = est
+        f.write_text(json.dumps(r, indent=1, default=str))
+    print("patched")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,3 @@
+# The paper's primary contribution: memory-efficient diffusion / flow-matching
+# generative models whose vector field is a boosted-tree forest.
+from repro.core.forest_flow import ForestGenerativeModel  # noqa: F401

@@ -1,0 +1,102 @@
+"""CTGAN-style conditional tabular GAN baseline (paper Table 2, [95]).
+
+A compact JAX implementation: MLP generator/discriminator, conditional
+class one-hot, non-saturating GAN loss with R1 gradient penalty. Sized for
+the benchmark-suite comparison role, not for SOTA GAN training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import TrainConfig
+from repro.core.nn_baselines import _mlp_apply, _mlp_init
+from repro.train.optim import adamw_update, init_opt_state
+
+
+class CTGANBaseline:
+    def __init__(self, latent: int = 32, hidden: int = 128,
+                 steps: int = 2000, batch: int = 128, lr: float = 2e-4):
+        self.latent, self.hidden = latent, hidden
+        self.steps, self.batch, self.lr = steps, batch, lr
+
+    def fit(self, X, y=None, *, seed: int = 0):
+        X = np.asarray(X, np.float32)
+        n, p = X.shape
+        self.p = p
+        self._mins, self._maxs = X.min(0), X.max(0)
+        scale = np.where(self._maxs > self._mins, self._maxs - self._mins, 1.)
+        Xs = (X - self._mins) / scale * 2 - 1
+        if y is None:
+            y = np.zeros((n,), np.int64)
+        self._classes, y_idx = np.unique(y, return_inverse=True)
+        n_y = len(self._classes)
+        self.n_y = n_y
+        self._counts = np.bincount(y_idx, minlength=n_y)
+
+        key = jax.random.PRNGKey(seed)
+        gen = _mlp_init(jax.random.fold_in(key, 0),
+                        [self.latent + n_y, self.hidden, self.hidden, p])
+        dis = _mlp_init(jax.random.fold_in(key, 1),
+                        [p + n_y, self.hidden, self.hidden, 1])
+        g_opt, d_opt = init_opt_state(gen), init_opt_state(dis)
+        tcfg = TrainConfig(learning_rate=self.lr, warmup_steps=20,
+                           total_steps=self.steps, weight_decay=0.0,
+                           beta1=0.5, beta2=0.9)
+        Xd = jnp.asarray(Xs)
+        yd = jax.nn.one_hot(jnp.asarray(y_idx), n_y)
+
+        def sample_fake(gp, k, cond):
+            z = jax.random.normal(k, (cond.shape[0], self.latent))
+            return jnp.tanh(_mlp_apply(gp, jnp.concatenate([z, cond], -1)))
+
+        def d_loss(dp, gp, k):
+            k1, k2 = jax.random.split(k)
+            idx = jax.random.randint(k1, (self.batch,), 0, n)
+            real, cond = Xd[idx], yd[idx]
+            fake = sample_fake(gp, k2, cond)
+            d_real = _mlp_apply(dp, jnp.concatenate([real, cond], -1))
+            d_fake = _mlp_apply(dp, jnp.concatenate([fake, cond], -1))
+            loss = (jnp.mean(jax.nn.softplus(-d_real))
+                    + jnp.mean(jax.nn.softplus(d_fake)))
+            # R1 penalty on real data
+            grad = jax.grad(lambda r: jnp.sum(_mlp_apply(
+                dp, jnp.concatenate([r, cond], -1))))(real)
+            return loss + 1.0 * jnp.mean(jnp.sum(grad ** 2, -1))
+
+        def g_loss(gp, dp, k):
+            k1, k2 = jax.random.split(k)
+            idx = jax.random.randint(k1, (self.batch,), 0, n)
+            cond = yd[idx]
+            fake = sample_fake(gp, k2, cond)
+            return jnp.mean(jax.nn.softplus(
+                -_mlp_apply(dp, jnp.concatenate([fake, cond], -1))))
+
+        @jax.jit
+        def step(gp, dp, go, do, k):
+            kd, kg = jax.random.split(k)
+            dl, dg = jax.value_and_grad(d_loss)(dp, gp, kd)
+            dp, do, _ = adamw_update(dg, do, dp, tcfg)
+            gl, gg = jax.value_and_grad(g_loss)(gp, dp, kg)
+            gp, go, _ = adamw_update(gg, go, gp, tcfg)
+            return gp, dp, go, do, dl, gl
+
+        for i in range(self.steps):
+            gen, dis, g_opt, d_opt, dl, gl = step(
+                gen, dis, g_opt, d_opt, jax.random.fold_in(key, 2 + i))
+        self.gen = gen
+        return self
+
+    def generate(self, n: int, *, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        probs = self._counts / self._counts.sum()
+        y_idx = np.sort(rng.choice(self.n_y, size=n, p=probs))
+        cond = jax.nn.one_hot(jnp.asarray(y_idx), self.n_y)
+        z = jax.random.normal(jax.random.PRNGKey(seed + 5), (n, self.latent))
+        from repro.core.nn_baselines import _mlp_apply as apply
+        x = np.asarray(jnp.tanh(apply(self.gen,
+                                      jnp.concatenate([z, cond], -1))))
+        scale = np.where(self._maxs > self._mins, self._maxs - self._mins, 1.)
+        return ((x + 1) / 2 * scale + self._mins).astype(np.float32), \
+            self._classes[y_idx]

@@ -1,0 +1,63 @@
+"""Mixed-type tabular handling (paper App. D.1: "Categorical variables are
+one-hot encoded", integer targets rounded).
+
+``TabularSchema`` dummy-encodes categorical columns before fitting and
+post-processes generated rows: one-hot groups re-argmaxed, integer columns
+rounded and clipped to the observed range — the original ForestDiffusion's
+``cat_indexes``/``int_indexes`` behaviour.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class TabularSchema:
+    def __init__(self, cat_cols: Sequence[int] = (),
+                 int_cols: Sequence[int] = ()):
+        self.cat_cols = sorted(cat_cols)
+        self.int_cols = sorted(set(int_cols) - set(cat_cols))
+
+    def fit(self, X: np.ndarray):
+        X = np.asarray(X)
+        self.n_raw = X.shape[1]
+        self._cats: Dict[int, np.ndarray] = {}
+        for c in self.cat_cols:
+            self._cats[c] = np.unique(X[:, c])
+        self._int_lo = {c: np.floor(X[:, c].min()) for c in self.int_cols}
+        self._int_hi = {c: np.ceil(X[:, c].max()) for c in self.int_cols}
+        # encoded layout: numeric/int columns first (original order), then
+        # one-hot blocks per categorical column
+        self._num_cols = [j for j in range(self.n_raw)
+                          if j not in self.cat_cols]
+        return self
+
+    @property
+    def encoded_width(self) -> int:
+        return len(self._num_cols) + sum(len(v) for v in self._cats.values())
+
+    def encode(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X)
+        parts = [X[:, self._num_cols].astype(np.float32)]
+        for c in self.cat_cols:
+            cats = self._cats[c]
+            onehot = (X[:, c][:, None] == cats[None, :]).astype(np.float32)
+            parts.append(onehot)
+        return np.concatenate(parts, axis=1)
+
+    def decode(self, Z: np.ndarray) -> np.ndarray:
+        Z = np.asarray(Z)
+        out = np.empty((Z.shape[0], self.n_raw), np.float64)
+        k = len(self._num_cols)
+        for i, j in enumerate(self._num_cols):
+            col = Z[:, i].astype(np.float64)
+            if j in self.int_cols:
+                col = np.clip(np.round(col), self._int_lo[j], self._int_hi[j])
+            out[:, j] = col
+        for c in self.cat_cols:
+            cats = self._cats[c]
+            block = Z[:, k:k + len(cats)]
+            out[:, c] = cats[np.argmax(block, axis=1)]
+            k += len(cats)
+        return out

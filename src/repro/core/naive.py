@@ -1,0 +1,80 @@
+"""Original-style (pre-rework) implementation — the paper's comparison
+baseline, with its pathologies faithfully recreated (paper §3.2):
+
+* Issue 1: materialises the full ``X_train`` of shape [n_t, nK, p] up front.
+* Issue 2 analogue: stores the noise array X1 (and a duplicate per-ensemble
+  *copy* of its training slice, like joblib advanced-indexing copies did).
+* Issue 3: keeps every trained ensemble in memory until the end.
+* Issue 6: refits bin edges / code matrices separately per output column.
+* Issue 7: runs the data path in float64.
+
+Used by benchmarks/bench_resource_scaling.py to reproduce Figure 1/2/4.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ForestConfig
+from repro.core import interpolants as itp
+from repro.forest.binning import edges_with_sentinel, fit_bins, transform
+from repro.forest.boosting import fit_boosted
+
+
+class NaiveForestGenerativeModel:
+    def __init__(self, fcfg: ForestConfig):
+        self.fcfg = fcfg
+
+    def fit(self, X, y=None, *, seed: int = 0):
+        fcfg = self.fcfg
+        X = np.asarray(X, np.float64)                      # Issue 7
+        n, p = X.shape
+        if y is None:
+            y = np.zeros((n,), np.int64)
+        classes = np.unique(y)
+        mn, mx = X.min(0), X.max(0)
+        scale = np.where(mx > mn, mx - mn, 1.0)
+        Xs = (X - mn) / scale * 2 - 1
+        self._mins, self._maxs = mn, mx
+        K = fcfg.duplicate_k
+        rng = np.random.default_rng(seed)
+        X0 = np.tile(Xs, (K, 1))                           # [nK, p]
+        X1 = rng.normal(size=X0.shape)                     # stored noise
+        yd = np.tile(np.asarray(y), K)
+        ts = np.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff))
+        # Issue 1: all timesteps at once -> [n_t, nK, p]
+        if fcfg.method == "flow":
+            X_train = ts[:, None, None] * X1 + (1 - ts[:, None, None]) * X0
+            Z = X1 - X0
+        else:
+            a, s = np.asarray(itp.vp_alpha_sigma(jnp.asarray(ts)))
+            X_train = a[:, None, None] * X0 + s[:, None, None] * X1
+            Z = None
+        self.models = []                                   # Issue 3
+        for ti in range(fcfg.n_t):
+            for c in classes:
+                mask = yd == c                             # boolean-mask copies
+                xt_c = X_train[ti][mask]                   # (Issue 5)
+                if fcfg.method == "flow":
+                    z_c = Z[mask]
+                else:
+                    _, sig = itp.vp_alpha_sigma(jnp.asarray(ts[ti]))
+                    z_c = -X1[mask] / float(sig)
+                w = jnp.ones((xt_c.shape[0],), jnp.float32)
+                for j in range(p):                         # Issue 6: per-output
+                    edges = fit_bins(jnp.asarray(xt_c, jnp.float32),
+                                     fcfg.n_bins)
+                    codes = transform(jnp.asarray(xt_c, jnp.float32), edges)
+                    res = fit_boosted(
+                        codes, jnp.asarray(z_c[:, j:j + 1], jnp.float32), w,
+                        edges_with_sentinel(edges), codes,
+                        jnp.asarray(z_c[:, j:j + 1], jnp.float32), w, fcfg)
+                    self.models.append(((ti, int(c), j),
+                                        jax.tree_util.tree_map(np.asarray,
+                                                               res)))
+        self._X_train = X_train     # held live, like the original
+        self._X1 = X1
+        return self

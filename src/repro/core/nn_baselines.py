@@ -1,0 +1,204 @@
+"""NN-backed baselines sharing the same interpolants as the forest models.
+
+* ``NNGenerativeModel`` — an MLP vector field trained on the identical CFM /
+  score-matching losses (STaSy / TabDDPM-style, minibatched like NNs are);
+  the apples-to-apples NN-vs-forest comparison the paper draws.
+* ``TVAEBaseline`` — a small tabular VAE (ELBO with Gaussian decoder).
+
+Both consume/emit numpy like ForestGenerativeModel.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ForestConfig, TrainConfig
+from repro.core import interpolants as itp
+from repro.train.optim import adamw_update, init_opt_state
+
+
+def _mlp_init(key, sizes, dtype=jnp.float32):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        params.append({
+            "w": (a ** -0.5) * jax.random.normal(k, (a, b), dtype),
+            "b": jnp.zeros((b,), dtype),
+        })
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jax.nn.silu(x)
+    return x
+
+
+def _time_embed(t, dim=32):
+    freqs = jnp.exp(jnp.linspace(0.0, 5.0, dim // 2))
+    ang = t[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class NNGenerativeModel:
+    """MLP vector field trained on the same CFM / score losses."""
+
+    def __init__(self, fcfg: ForestConfig, hidden: int = 256, depth: int = 3,
+                 steps: int = 2000, batch: int = 256, lr: float = 1e-3):
+        self.fcfg = fcfg
+        self.hidden, self.depth = hidden, depth
+        self.steps, self.batch, self.lr = steps, batch, lr
+
+    def fit(self, X, y=None, *, seed: int = 0):
+        X = np.asarray(X, np.float32)
+        n, p = X.shape
+        self._mins, self._maxs = X.min(0), X.max(0)
+        scale = np.where(self._maxs > self._mins, self._maxs - self._mins, 1.0)
+        Xs = (X - self._mins) / scale * 2 - 1
+        if y is None:
+            y = np.zeros((n,), np.int64)
+        self._classes, y_idx = np.unique(y, return_inverse=True)
+        n_y = len(self._classes)
+        self.p, self.n_y = p, n_y
+        self._counts = np.bincount(y_idx, minlength=n_y)
+
+        key = jax.random.PRNGKey(seed)
+        in_dim = p + 32 + n_y
+        params = _mlp_init(key, [in_dim] + [self.hidden] * self.depth + [p])
+        opt = init_opt_state(params)
+        tcfg = TrainConfig(learning_rate=self.lr, warmup_steps=50,
+                           total_steps=self.steps, weight_decay=0.0,
+                           grad_clip=1.0)
+        Xd = jnp.asarray(Xs)
+        yd = jax.nn.one_hot(jnp.asarray(y_idx), n_y)
+        fcfg = self.fcfg
+
+        def loss_fn(pp, k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            idx = jax.random.randint(k1, (self.batch,), 0, n)
+            x0 = Xd[idx]
+            yo = yd[idx]
+            t = jax.random.uniform(k2, (self.batch,),
+                                   minval=fcfg.eps_diff
+                                   if fcfg.method == "diffusion" else 0.0)
+            x1 = jax.random.normal(k3, x0.shape)
+            xt, tgt = jax.vmap(
+                lambda a, b, tt: itp.make_xt_target(fcfg.method, a, b, tt)
+            )(x0, x1, t)
+            # scale score targets so the regression is O(1) (precondition)
+            if fcfg.method == "diffusion":
+                _, sig = itp.vp_alpha_sigma(t)
+                tgt = tgt * sig[:, None]
+            inp = jnp.concatenate([xt, _time_embed(t), yo], axis=-1)
+            out = _mlp_apply(pp, inp)
+            return jnp.mean(jnp.square(out - tgt))
+
+        @jax.jit
+        def step(pp, oo, k):
+            l, g = jax.value_and_grad(loss_fn)(pp, k)
+            pp, oo, _ = adamw_update(g, oo, pp, tcfg)
+            return pp, oo, l
+
+        for i in range(self.steps):
+            params, opt, l = step(params, opt, jax.random.fold_in(key, i + 1))
+        self.params = params
+        return self
+
+    def _field(self, x, t, y_onehot):
+        tt = jnp.full((x.shape[0],), t)
+        inp = jnp.concatenate([x, _time_embed(tt), y_onehot], axis=-1)
+        out = _mlp_apply(self.params, inp)
+        if self.fcfg.method == "diffusion":
+            _, sig = itp.vp_alpha_sigma(t)
+            out = out / sig
+        return out
+
+    def generate(self, n: int, *, seed: int = 0, n_steps: int = 50):
+        rng = np.random.default_rng(seed)
+        probs = self._counts / self._counts.sum()
+        y_idx = np.sort(rng.choice(self.n_y, size=n, p=probs))
+        yo = jax.nn.one_hot(jnp.asarray(y_idx), self.n_y)
+        key = jax.random.PRNGKey(seed + 11)
+        x = jax.random.normal(key, (n, self.p))
+        fcfg = self.fcfg
+        if fcfg.method == "flow":
+            h = 1.0 / (n_steps - 1)
+            for t in np.linspace(1.0, h, n_steps - 1):
+                x = x - h * self._field(x, jnp.float32(t), yo)
+        else:
+            ts = np.asarray(itp.timesteps("diffusion", n_steps,
+                                          fcfg.eps_diff))[::-1]
+            for t_now, t_next in zip(ts[:-1], ts[1:]):
+                a_now, s_now = itp.vp_alpha_sigma(jnp.float32(t_now))
+                a_next, s_next = itp.vp_alpha_sigma(jnp.float32(t_next))
+                score = self._field(x, jnp.float32(t_now), yo)
+                eps_hat = -s_now * score
+                x0_hat = jnp.clip((x - s_now * eps_hat) / a_now, -1.5, 1.5)
+                eps_hat = (x - a_now * x0_hat) / s_now
+                x = a_next * x0_hat + s_next * eps_hat
+        x = np.asarray(x)
+        scale = np.where(self._maxs > self._mins, self._maxs - self._mins, 1.0)
+        X = (x + 1) / 2 * scale + self._mins
+        return X, self._classes[y_idx]
+
+
+class TVAEBaseline:
+    """Small tabular VAE (Gaussian encoder/decoder), TVAE-style."""
+
+    def __init__(self, latent: int = 8, hidden: int = 128, steps: int = 1500,
+                 batch: int = 256, lr: float = 1e-3):
+        self.latent, self.hidden = latent, hidden
+        self.steps, self.batch, self.lr = steps, batch, lr
+
+    def fit(self, X, y=None, *, seed: int = 0):
+        X = np.asarray(X, np.float32)
+        n, p = X.shape
+        self.p = p
+        self._mins, self._maxs = X.min(0), X.max(0)
+        scale = np.where(self._maxs > self._mins, self._maxs - self._mins, 1.0)
+        Xs = (X - self._mins) / scale * 2 - 1
+        key = jax.random.PRNGKey(seed)
+        enc = _mlp_init(jax.random.fold_in(key, 0),
+                        [p, self.hidden, 2 * self.latent])
+        dec = _mlp_init(jax.random.fold_in(key, 1),
+                        [self.latent, self.hidden, p])
+        params = {"enc": enc, "dec": dec}
+        opt = init_opt_state(params)
+        tcfg = TrainConfig(learning_rate=self.lr, warmup_steps=50,
+                           total_steps=self.steps, weight_decay=0.0)
+        Xd = jnp.asarray(Xs)
+
+        def loss_fn(pp, k):
+            k1, k2 = jax.random.split(k)
+            idx = jax.random.randint(k1, (self.batch,), 0, n)
+            x = Xd[idx]
+            h = _mlp_apply(pp["enc"], x)
+            mu, logvar = h[:, :self.latent], h[:, self.latent:]
+            z = mu + jnp.exp(0.5 * logvar) * jax.random.normal(k2, mu.shape)
+            xr = _mlp_apply(pp["dec"], z)
+            rec = jnp.mean(jnp.sum(jnp.square(xr - x), -1))
+            kl = -0.5 * jnp.mean(jnp.sum(1 + logvar - mu ** 2
+                                         - jnp.exp(logvar), -1))
+            return rec + 0.1 * kl
+
+        @jax.jit
+        def step(pp, oo, k):
+            l, g = jax.value_and_grad(loss_fn)(pp, k)
+            pp, oo, _ = adamw_update(g, oo, pp, tcfg)
+            return pp, oo, l
+
+        for i in range(self.steps):
+            params, opt, _ = step(params, opt, jax.random.fold_in(key, i + 1))
+        self.params = params
+        return self
+
+    def generate(self, n: int, *, seed: int = 0):
+        z = jax.random.normal(jax.random.PRNGKey(seed), (n, self.latent))
+        x = np.asarray(_mlp_apply(self.params["dec"], z))
+        scale = np.where(self._maxs > self._mins, self._maxs - self._mins, 1.0)
+        return ((x + 1) / 2 * scale + self._mins).astype(np.float32)

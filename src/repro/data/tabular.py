@@ -1,0 +1,36 @@
+"""Synthetic tabular datasets for resource-scaling benchmarks (paper §4.1,
+App. D.1) plus small real-ish benchmark generators for quality metrics."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def synthetic_resource_dataset(n: int, p: int, n_y: int, seed: int = 0):
+    """Paper D.1: X ~ N(0, I); labels uniform over [0, n_y). Random feature
+    correlations make unregularised trees use their full capacity."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, p)).astype(np.float32)
+    y = rng.integers(0, n_y, size=n).astype(np.int64)
+    return X, y
+
+
+def two_moons(n: int, noise: float = 0.08, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n2 = n // 2
+    t = np.pi * rng.random(n2)
+    a = np.stack([np.cos(t), np.sin(t)], 1)
+    b = np.stack([1 - np.cos(t), 0.5 - np.sin(t)], 1)
+    X = np.concatenate([a, b]) + noise * rng.normal(size=(2 * n2, 2))
+    y = np.concatenate([np.zeros(n2), np.ones(n2)]).astype(np.int64)
+    perm = rng.permutation(len(X))
+    return X[perm].astype(np.float32), y[perm]
+
+
+def correlated_gaussian(n: int, p: int, seed: int = 0):
+    """Full-rank correlated Gaussian — tests joint-structure learning (the
+    paper's MO-trees motivation)."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(p, p)) / np.sqrt(p)
+    cov = A @ A.T + 0.1 * np.eye(p)
+    X = rng.multivariate_normal(np.zeros(p), cov, size=n)
+    return X.astype(np.float32), cov

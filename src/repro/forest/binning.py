@@ -1,0 +1,53 @@
+"""Quantile binning — the QuantileDMatrix analogue.
+
+``fit_bins`` computes per-feature quantile edges once; ``transform`` turns raw
+features into small integer bin codes (int8 when n_bins <= 128). Downstream
+training touches only the codes: 4-8x smaller than fp32 features, computed
+on-the-fly per ensemble from (X0, X1) so the [n_t, nK, p] array of noised
+inputs is never materialised (paper Issue 1 / App. B.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fit_bins(x, n_bins: int):
+    """Per-feature quantile edges.
+
+    x: [n, p]. Returns edges [p, n_bins - 1] (ascending; code = #edges < x).
+    Matches XGBoost sketch semantics closely enough for distribution metrics.
+    """
+    qs = jnp.linspace(0.0, 1.0, n_bins + 1)[1:-1]
+    edges = jnp.quantile(x, qs, axis=0).T  # [p, n_bins-1]
+    return edges.astype(jnp.float32)
+
+
+def transform(x, edges):
+    """Bin codes: code[i, j] = number of edges strictly below x[i, j].
+
+    Returns int32 in [0, n_bins - 1]. ``code > b``  <=>  ``x > edges[:, b]``.
+    Uses per-feature searchsorted so no [n, p, n_bins] temporary is built
+    (the binning-time version of the paper's memory discipline).
+    """
+    def per_feature(col, e):
+        return jnp.searchsorted(e, col, side="left")
+
+    return jax.vmap(per_feature, in_axes=(1, 0), out_axes=1)(x, edges).astype(
+        jnp.int32)
+
+
+def pack_codes(codes, n_bins: int):
+    """Store codes at the narrowest dtype (int8 when it fits)."""
+    if n_bins <= 127:
+        return codes.astype(jnp.int8)
+    if n_bins <= 32767:
+        return codes.astype(jnp.int16)
+    return codes
+
+
+def edges_with_sentinel(edges):
+    """Append +inf so thr_bin == n_bins - 1 means 'never go right'."""
+    p = edges.shape[0]
+    inf = jnp.full((p, 1), jnp.inf, edges.dtype)
+    return jnp.concatenate([edges, inf], axis=1)  # [p, n_bins]

@@ -1,0 +1,119 @@
+"""Boosting loop with adaptive early stopping (paper §3.4).
+
+``fit_boosted`` fits one ensemble (single- or multi-output) with a
+``lax.while_loop`` so training actually stops when the fresh-noise validation
+loss stalls for ``early_stop_rounds`` rounds — the compute saving the paper
+reports (up to 3x). Per-ensemble best-round masking makes the packed model
+identical to one trained with exact per-ensemble stopping.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ForestConfig
+from repro.forest.tree import Tree, grow_tree, predict_tree_codes
+
+
+class BoostResult(NamedTuple):
+    feat: jnp.ndarray       # [T, H] int32
+    thr_val: jnp.ndarray    # [T, H] fp32
+    leaf: jnp.ndarray       # [T, L, out] fp32 (rounds past best are zeroed)
+    best_round: jnp.ndarray  # [] int32 (index of best validation round)
+    rounds_run: jnp.ndarray  # [] int32
+    val_curve: jnp.ndarray   # [T] fp32 (inf for rounds not run)
+
+
+def _wmse(pred, tgt, w, axis_names: Sequence[str]):
+    num = jnp.sum(w[:, None] * jnp.square(pred - tgt))
+    den = jnp.sum(w) * tgt.shape[1]
+    for ax in axis_names:
+        num = jax.lax.psum(num, ax)
+        den = jax.lax.psum(den, ax)
+    return num / jnp.maximum(den, 1e-12)
+
+
+def fit_boosted(codes, tgt, w, edges_sentinel, val_codes, val_tgt, val_w,
+                fcfg: ForestConfig, axis_names: Sequence[str] = (),
+                scatter_shards: int = 0) -> BoostResult:
+    """codes/val_codes: [n, p] int; tgt/val_tgt: [n, out]; w: [n] weights."""
+    n, p = codes.shape
+    out = tgt.shape[1]
+    T, depth = fcfg.n_trees, fcfg.max_depth
+    H, L = 2 ** depth - 1, 2 ** depth
+    es = fcfg.early_stop_rounds
+
+    feat_buf = jnp.zeros((T, H), jnp.int32)
+    thr_buf = jnp.full((T, H), jnp.inf, jnp.float32)
+    leaf_buf = jnp.zeros((T, L, out), jnp.float32)
+    vcurve = jnp.full((T,), jnp.inf, jnp.float32)
+
+    def cond(state):
+        r = state[0]
+        ok = r < T
+        if es > 0:
+            ok = ok & (state[6] < es)
+        return ok
+
+    def body(state):
+        (r, pred, vpred, best_loss, best_r, bufs, patience, vc) = state
+        feat_b, thr_b, leaf_b = bufs
+        g = pred - tgt
+        tree, node_id = grow_tree(
+            codes, g, w, edges_sentinel, depth=depth, n_bins=fcfg.n_bins,
+            reg_lambda=fcfg.reg_lambda, min_child_weight=fcfg.min_child_weight,
+            learning_rate=fcfg.learning_rate, axis_names=axis_names,
+            scatter_shards=scatter_shards, hist_bf16=fcfg.hist_bf16)
+        pred = pred + tree.leaf[node_id]
+        vpred = vpred + predict_tree_codes(val_codes, tree, depth)
+        vloss = _wmse(vpred, val_tgt, val_w, axis_names)
+        improved = vloss < best_loss
+        best_loss = jnp.minimum(vloss, best_loss)
+        best_r = jnp.where(improved, r, best_r)
+        patience = jnp.where(improved, 0, patience + 1)
+        feat_b = jax.lax.dynamic_update_slice(feat_b, tree.feat[None], (r, 0))
+        thr_b = jax.lax.dynamic_update_slice(thr_b, tree.thr_val[None], (r, 0))
+        leaf_b = jax.lax.dynamic_update_slice(leaf_b, tree.leaf[None], (r, 0, 0))
+        vc = vc.at[r].set(vloss)
+        return (r + 1, pred, vpred, best_loss, best_r,
+                (feat_b, thr_b, leaf_b), patience, vc)
+
+    state = (jnp.int32(0),
+             jnp.zeros((n, out), jnp.float32),
+             jnp.zeros((val_codes.shape[0], out), jnp.float32),
+             jnp.float32(jnp.inf), jnp.int32(0),
+             (feat_buf, thr_buf, leaf_buf), jnp.int32(0), vcurve)
+    state = jax.lax.while_loop(cond, body, state)
+    rounds_run, _, _, _, best_r, bufs, _, vc = state
+    feat_b, thr_b, leaf_b = bufs
+    if es > 0:
+        keep = (jnp.arange(T) <= best_r)[:, None, None]
+        leaf_b = jnp.where(keep, leaf_b, 0.0)
+    else:
+        best_r = rounds_run - 1
+    return BoostResult(feat_b, thr_b, leaf_b, best_r, rounds_run, vc)
+
+
+def fit_ensemble(codes, tgt, w, edges_sentinel, val_codes, val_tgt, val_w,
+                 fcfg: ForestConfig, axis_names: Sequence[str] = (),
+                 scatter_shards: int = 0):
+    """SO: vmap scalar-output boosting over the p outputs (shared codes);
+    MO: one vector-leaf boosting run.
+
+    Returns BoostResult with leading sub-ensemble dim:
+      MO: feat [1, T, H],  leaf [1, T, L, out]
+      SO: feat [out, T, H], leaf [out, T, L, 1]
+    """
+    if fcfg.multi_output:
+        res = fit_boosted(codes, tgt, w, edges_sentinel, val_codes, val_tgt,
+                          val_w, fcfg, axis_names, scatter_shards)
+        return jax.tree_util.tree_map(lambda a: a[None], res)
+
+    def one(t_col, v_col):
+        return fit_boosted(codes, t_col[:, None], w, edges_sentinel,
+                           val_codes, v_col[:, None], val_w, fcfg, axis_names,
+                           scatter_shards)
+
+    return jax.vmap(one, in_axes=(1, 1))(tgt, val_tgt)

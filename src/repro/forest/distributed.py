@@ -1,0 +1,130 @@
+"""Distributed ForestFlow training under shard_map.
+
+Layout (the TPU-native version of the paper's joblib pool, DESIGN.md §2):
+
+* rows of (X0, w) are sharded across the ``data`` mesh axes (and ``pod``);
+* the (timestep, class) ensemble grid is sharded across the ``model`` axis —
+  each model-axis slice trains its own ensembles on the *same* row shards;
+* histogram accumulation psums partial [nodes, p, bins] histograms over the
+  data axes — exactly distributed XGBoost's allreduce, as a JAX collective;
+* bin edges come from a gathered per-device subsample (the distributed
+  quantile-sketch approximation).
+
+Class conditioning is weight-masking: ensemble e has per-row weight
+``w * (class_id == y_e)`` so row shards never need class-sorted layouts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ForestConfig
+from repro.core import interpolants as itp
+from repro.forest.binning import (edges_with_sentinel, pack_codes,
+                                  transform)
+from repro.forest.boosting import fit_ensemble
+
+
+def _sketch_edges(xt, w, n_bins: int, data_axes: Sequence[str],
+                  sketch_rows: int = 2048):
+    """Approximate global quantile edges from a gathered subsample."""
+    take = min(sketch_rows, xt.shape[0])
+    sample = xt[:take]
+    sw = w[:take]
+    for ax in data_axes:
+        sample = jax.lax.all_gather(sample, ax, axis=0, tiled=True)
+        sw = jax.lax.all_gather(sw, ax, axis=0, tiled=True)
+    big = jnp.where(sw[:, None] > 0, sample, jnp.inf)
+    s = jnp.sort(big, axis=0)
+    n_real = jnp.sum(sw > 0).astype(jnp.float32)
+    qs = jnp.arange(1, n_bins, dtype=jnp.float32) / n_bins
+    idx = jnp.clip((qs * (n_real - 1.0)).astype(jnp.int32), 0, s.shape[0] - 1)
+    return jnp.transpose(s[idx])
+
+
+def _fit_one_sharded(x0, w, class_id, t, y_e, key2, fcfg: ForestConfig,
+                     data_axes: Tuple[str, ...], scatter_shards: int = 0):
+    """Train one (t, y) ensemble on this device's row shard (+collectives)."""
+    K = fcfg.duplicate_k
+    x0d = jnp.repeat(x0, K, axis=0)
+    wd = jnp.repeat(w * (class_id == y_e).astype(jnp.float32), K, axis=0)
+    # decorrelate noise across row shards: fold the data-axis coordinates in
+    shard_id = jnp.int32(0)
+    for ax in data_axes:
+        shard_id = shard_id * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    k_tr = jax.random.fold_in(key2[0], shard_id)
+    k_va = jax.random.fold_in(key2[1], shard_id)
+    x1 = jax.random.normal(k_tr, x0d.shape, jnp.float32)
+    xt, tgt = itp.make_xt_target(fcfg.method, x0d, x1, t, fcfg.sigma, k_tr)
+    edges = _sketch_edges(xt, wd, fcfg.n_bins, data_axes)
+    codes = transform(xt, edges)
+    x1v = jax.random.normal(k_va, x0d.shape, jnp.float32)
+    xtv, tgtv = itp.make_xt_target(fcfg.method, x0d, x1v, t, fcfg.sigma, k_va)
+    codes_v = transform(xtv, edges)
+    if fcfg.int8_codes:   # QuantileDMatrix-style narrow storage
+        codes = pack_codes(codes, fcfg.n_bins)
+        codes_v = pack_codes(codes_v, fcfg.n_bins)
+    return fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
+                        codes_v, tgtv, wd, fcfg, axis_names=data_axes,
+                        scatter_shards=scatter_shards)
+
+
+def make_distributed_fit(mesh: Mesh, fcfg: ForestConfig,
+                         data_axes: Tuple[str, ...] = ("data",),
+                         model_axis: str = "model"):
+    """Build the jitted shard_map trainer.
+
+    Returned fn signature:
+      fn(x0 [n, p], w [n], class_id [n], ts [n_ens], ys [n_ens],
+         keys [n_ens, 2] PRNG keys) -> BoostResult stacked over n_ens.
+    n must divide by prod(data axes); n_ens by the model axis.
+    """
+
+    shards = (dict(zip(mesh.axis_names, mesh.devices.shape))[data_axes[-1]]
+              if fcfg.split_reduce == "reduce_scatter" else 0)
+
+    def per_device(x0, w, cid, ts, ys, keys):
+        fit = functools.partial(_fit_one_sharded, x0, w, cid,
+                                fcfg=fcfg, data_axes=data_axes,
+                                scatter_shards=shards)
+        # sequential map over local ensembles: one set of codes live at a
+        # time (the Issue-1 memory discipline under sharding)
+        return jax.lax.map(lambda tyk: fit(tyk[0], tyk[1], tyk[2]),
+                           (ts, ys, keys))
+
+    row_spec = P(data_axes)
+    ens_spec = P(model_axis)
+    try:
+        from jax import shard_map  # jax >= 0.6
+    except ImportError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map
+    mapped = shard_map(
+        per_device, mesh=mesh,
+        in_specs=(row_spec, row_spec, row_spec, ens_spec, ens_spec,
+                  P(model_axis, None, None)),
+        out_specs=jax.tree_util.tree_map(lambda _: P(model_axis), _result_spec()),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def _result_spec():
+    """Tree prototype matching BoostResult for out_specs construction."""
+    from repro.forest.boosting import BoostResult
+    return BoostResult(0, 0, 0, 0, 0, 0)
+
+
+def input_specs_forest(fcfg: ForestConfig, n_rows: int, p: int, n_ens: int):
+    """ShapeDtypeStructs for the distributed-forest dry-run."""
+    sds = jax.ShapeDtypeStruct
+    return (
+        sds((n_rows, p), jnp.float32),       # x0
+        sds((n_rows,), jnp.float32),         # w
+        sds((n_rows,), jnp.int32),           # class_id
+        sds((n_ens,), jnp.float32),          # ts
+        sds((n_ens,), jnp.int32),            # ys
+        sds((n_ens, 2, 2), jnp.uint32),      # keys (legacy uint32[2] per split)
+    )

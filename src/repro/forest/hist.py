@@ -1,0 +1,54 @@
+"""Gradient/count histogram accumulation — the XGBoost ``hist`` hot spot.
+
+``build_histogram`` is the pure-jnp implementation (segment-sum per feature).
+On TPU the Pallas kernel in ``repro/kernels/hist`` implements the same
+contract as a one-hot MXU matmul; ``repro.kernels.hist.ops.histogram``
+dispatches between them.
+
+``axis_names`` turns this into the *distributed* histogram: rows are sharded
+across the named mesh axes and partial histograms are psum'd — exactly
+XGBoost's Rabit allreduce-of-histograms, expressed as a JAX collective.
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# 'xla' | 'pallas' | 'pallas_interpret' — TPU runs set REPRO_HIST_IMPL=pallas.
+_IMPL = os.environ.get("REPRO_HIST_IMPL", "xla")
+
+
+def build_histogram(codes, node_id, g, w, n_nodes: int, n_bins: int,
+                    axis_names: Sequence[str] = ()) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Accumulate per-(node, feature, bin) gradient sums and weights.
+
+    codes: [n, p] int; node_id: [n] int32; g: [n, out] fp32; w: [n] fp32.
+    Returns (sum_g [n_nodes, p, n_bins, out], count [n_nodes, p, n_bins]).
+    """
+    if _IMPL != "xla":
+        from repro.kernels.hist.hist_kernel import histogram_pallas
+        sums, cnt = histogram_pallas(codes, node_id, g, w, n_nodes, n_bins,
+                                     interpret=(_IMPL == "pallas_interpret"))
+        for ax in axis_names:
+            sums = jax.lax.psum(sums, ax)
+            cnt = jax.lax.psum(cnt, ax)
+        return sums, cnt
+    n, p = codes.shape
+    seg_base = node_id.astype(jnp.int32) * n_bins
+
+    def per_feature(codes_j):
+        seg = seg_base + codes_j.astype(jnp.int32)
+        sums = jax.ops.segment_sum(g * w[:, None], seg,
+                                   num_segments=n_nodes * n_bins)
+        cnt = jax.ops.segment_sum(w, seg, num_segments=n_nodes * n_bins)
+        return sums.reshape(n_nodes, n_bins, -1), cnt.reshape(n_nodes, n_bins)
+
+    sums, cnt = jax.vmap(per_feature, in_axes=1, out_axes=1)(codes)
+    # sums: [n_nodes, p, n_bins, out]; cnt: [n_nodes, p, n_bins]
+    for ax in axis_names:
+        sums = jax.lax.psum(sums, ax)
+        cnt = jax.lax.psum(cnt, ax)
+    return sums, cnt

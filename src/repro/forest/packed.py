@@ -1,0 +1,44 @@
+"""Packed forests: stacked tree arrays + vectorised inference.
+
+The packed layout (feat/thr/leaf arrays with leading [n_sub, T] dims) is what
+the Pallas ``tree_predict`` kernel consumes; ``predict_forest`` here is the
+XLA/ref path. One packed forest represents one (timestep, class) ensemble;
+the generator stacks them further to [n_t, ...] for the ODE/SDE solve.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.forest.tree import predict_tree_values
+
+
+class PackedForest(NamedTuple):
+    feat: jnp.ndarray      # [n_sub, T, H] int32
+    thr_val: jnp.ndarray   # [n_sub, T, H] fp32
+    leaf: jnp.ndarray      # [n_sub, T, L, out_sub] fp32
+    multi_output: bool     # static
+
+
+def from_boost_result(res, multi_output: bool) -> PackedForest:
+    return PackedForest(res.feat, res.thr_val, res.leaf, multi_output)
+
+
+def predict_forest(x, forest: PackedForest, depth: int):
+    """x: [n, p] raw feature values. Returns [n, p_out]."""
+
+    def sub_predict(feat, thr, leaf):
+        def tree_step(acc, tr):
+            f, t, l = tr
+            return acc + predict_tree_values(x, f, t, l, depth), None
+
+        acc0 = jnp.zeros((x.shape[0], leaf.shape[-1]), jnp.float32)
+        acc, _ = jax.lax.scan(tree_step, acc0, (feat, thr, leaf))
+        return acc
+
+    out = jax.vmap(sub_predict)(forest.feat, forest.thr_val, forest.leaf)
+    if forest.multi_output:
+        return out[0]                      # [n, p_out]
+    return jnp.transpose(out[:, :, 0])     # SO: [p_out, n, 1] -> [n, p_out]

@@ -1,0 +1,47 @@
+"""Best-split search from histograms (second-order boosting gain).
+
+For squared-error boosting the hessian is 1, so H == the accumulated sample
+weight. Multi-output trees (Zhang & Jung, GBDT-MO) sum the gain over outputs
+and share one split structure — this is what makes MO trees p-times cheaper
+at generation and better at joint structure (paper §3.4).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def best_splits(sum_g, count, reg_lambda: float, min_child_weight: float
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pick the best (feature, bin) per node.
+
+    sum_g: [nodes, p, bins, out]; count: [nodes, p, bins].
+    Returns (feat [nodes] int32, thr_bin [nodes] int32, gain [nodes] fp32).
+    Nodes whose best gain <= 0 get thr_bin = n_bins - 1 (the +inf sentinel:
+    every sample routes left — the static-shape analogue of not splitting).
+    """
+    nodes, p, bins, out = sum_g.shape
+    gl = jnp.cumsum(sum_g, axis=2)          # left sums for split at bin b
+    hl = jnp.cumsum(count, axis=2)
+    gt = gl[:, :, -1:, :]
+    ht = hl[:, :, -1:]
+    gr = gt - gl
+    hr = ht - hl
+
+    def score(g2, h):
+        return jnp.sum(jnp.square(g2), axis=-1) / (h + reg_lambda + 1e-12)
+
+    gain = score(gl, hl) + score(gr, hr) - score(gt, ht)  # [nodes, p, bins]
+    valid = (hl >= min_child_weight) & (hr >= min_child_weight)
+    gain = jnp.where(valid, gain, -jnp.inf)
+    flat = gain.reshape(nodes, p * bins)
+    best = jnp.argmax(flat, axis=1)
+    best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
+    feat = (best // bins).astype(jnp.int32)
+    thr = (best % bins).astype(jnp.int32)
+    dead = ~(best_gain > 0.0)
+    feat = jnp.where(dead, 0, feat)
+    thr = jnp.where(dead, bins - 1, thr)
+    return feat, thr, jnp.where(dead, 0.0, best_gain)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: block-tiled online-softmax (flash) attention.
+
+Grid (B*Hq, q_blocks, kv_blocks); the kv dimension is the innermost
+("arbitrary") axis and accumulates into VMEM scratch (acc, m, l); the output
+tile is written on the last kv step. GQA is zero-copy: the K/V BlockSpec
+index maps fold the query-head -> kv-head mapping, so grouped heads read the
+same K/V tiles without materialising repeats.
+
+Block sizes default to (bq, bk) = (256, 512): fp32 scores tile 256x512 (512
+KiB) + q/k/v/acc tiles fit VMEM with double buffering; all dims multiples of
+the 8x128 VPU lane layout for d_head in {64, 128, 160, 256}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = True
+    if causal:
+        run = ki * bk <= qi * bq + bq - 1  # block intersects the causal band
+
+    @pl.when(run)
+    def _update():
+        q = q_ref[...][0].astype(jnp.float32) * scale   # [bq, d]
+        k = k_ref[...][0].astype(jnp.float32)           # [bk, d]
+        v = v_ref[...][0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bq,bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]
+        l_prev = l_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l, 1e-30)[:, None])[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, bq: int = 256,
+                           bk: int = 512, interpret: bool = False):
+    """q: [B, Hq, Sq, d]; k, v: [B, Hkv, Skv, d]. Returns [B, Hq, Sq, d]."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    grid = (b * hq, sq // bq, skv // bk)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // hq) * hkv + (bh % hq) // g, ki, 0)
+
+    kernel = functools.partial(_fa_kernel, scale=1.0 / (d ** 0.5),
+                               causal=causal, bq=bq, bk=bk)
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        scratch = [pltpu.VMEM((bq, d), jnp.float32),
+                   pltpu.VMEM((bq, 1), jnp.float32),
+                   pltpu.VMEM((bq, 1), jnp.float32)]
+    except ImportError:  # pragma: no cover
+        scratch = [pl.VMEM((bq, d), jnp.float32)]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,18 @@
+"""Jit'd dispatch wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.fa_kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl"))
+def flash_attention(q, k, v, causal: bool = True, impl: str = "xla"):
+    """impl: 'xla' (oracle / dry-run path) | 'pallas' | 'pallas_interpret'."""
+    if impl == "xla":
+        return attention_ref(q, k, v, causal)
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,19 @@
+"""Jit'd dispatch wrapper for the histogram kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.hist.hist_kernel import histogram_pallas
+from repro.kernels.hist.ref import histogram_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "impl"))
+def histogram(codes, node_id, g, w, n_nodes: int, n_bins: int,
+              impl: str = "xla"):
+    """impl: 'xla' (segment-sum ref), 'pallas' (TPU), 'pallas_interpret'."""
+    if impl == "xla":
+        return histogram_ref(codes, node_id, g, w, n_nodes, n_bins)
+    return histogram_pallas(codes, node_id, g, w, n_nodes, n_bins,
+                            interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the histogram-build kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(codes, node_id, g, w, n_nodes: int, n_bins: int):
+    """codes [n, p] int; node_id [n] int32; g [n, out] fp32; w [n] fp32.
+
+    Returns (sum_g [n_nodes, p, n_bins, out], count [n_nodes, p, n_bins]).
+    """
+    seg_base = node_id.astype(jnp.int32) * n_bins
+
+    def per_feature(codes_j):
+        seg = seg_base + codes_j.astype(jnp.int32)
+        sums = jax.ops.segment_sum(g * w[:, None], seg,
+                                   num_segments=n_nodes * n_bins)
+        cnt = jax.ops.segment_sum(w, seg, num_segments=n_nodes * n_bins)
+        return sums.reshape(n_nodes, n_bins, -1), cnt.reshape(n_nodes, n_bins)
+
+    sums, cnt = jax.vmap(per_feature, in_axes=1, out_axes=1)(codes)
+    return sums, cnt

@@ -1,0 +1,18 @@
+"""Jit'd dispatch wrapper for packed-forest inference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.tree_predict.ref import forest_predict_ref
+from repro.kernels.tree_predict.tree_kernel import forest_predict_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "impl"))
+def forest_predict(x, feat, thr_val, leaf, depth: int, impl: str = "xla"):
+    """impl: 'xla' | 'pallas' | 'pallas_interpret'."""
+    if impl == "xla":
+        return forest_predict_ref(x, feat, thr_val, leaf, depth)
+    return forest_predict_pallas(x, feat, thr_val, leaf, depth,
+                                 interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for packed-forest inference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def forest_predict_ref(x, feat, thr_val, leaf, depth: int):
+    """x: [n, p]; feat/thr_val: [T, H]; leaf: [T, L, out]. Returns [n, out]."""
+
+    def one_tree(acc, tr):
+        f_h, t_h, l_h = tr
+        node = jnp.zeros((x.shape[0],), jnp.int32)
+        for level in range(depth):
+            heap = node + (2 ** level - 1)
+            f = f_h[heap]
+            t = t_h[heap]
+            c = jnp.take_along_axis(x, f[:, None], axis=1)[:, 0]
+            node = node * 2 + (c > t).astype(jnp.int32)
+        return acc + l_h[node], None
+
+    acc0 = jnp.zeros((x.shape[0], leaf.shape[-1]), jnp.float32)
+    acc, _ = jax.lax.scan(one_tree, acc0, (feat, thr_val, leaf))
+    return acc

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: packed-forest inference (generation hot spot, App. B.2).
+
+Gather-free traversal: per level, the per-row (feature, threshold) pair is
+selected with a one-hot matmul over the heap arrays, and the feature value is
+selected with a one-hot mask over the row tile — every step is an MXU/VPU
+contraction, no scalar gathers (TPU adaptation of the level-by-level compare
+that XGBoost's C++ inference performs pointer-chasing for).
+
+Grid: (row_blocks, trees); trees accumulate into the same output block.
+VMEM per step: [R, p] row tile + [R, max(H, p, L)] one-hot — with R=256,
+p<=640, depth 7 (H=127, L=128) comfortably under v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot(idx, size):
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], size), 1)
+    return (idx[:, None] == iota).astype(jnp.float32)
+
+
+def _predict_kernel(x_ref, feat_ref, thr_ref, leaf_ref, out_ref, *,
+                    depth: int):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                       # [R, p]
+    feat = feat_ref[...][0]              # [H]
+    # +inf sentinels ("never go right") must be finite: 0 * inf = NaN in the
+    # one-hot select matmul. 1e30 exceeds any scaled feature value.
+    thr = jnp.clip(thr_ref[...][0], -1e30, 1e30)
+    leaf = leaf_ref[...][0]              # [L, out]
+    n_heap = feat.shape[0]
+    p = x.shape[1]
+    node = jnp.zeros((x.shape[0],), jnp.int32)
+    for level in range(depth):
+        heap = node + (2 ** level - 1)
+        sel = _onehot(heap, n_heap)                       # [R, H]
+        f = jnp.round(sel @ feat.astype(jnp.float32)).astype(jnp.int32)
+        tv = sel @ thr                                    # [R]
+        xv = jnp.sum(x * _onehot(f, p), axis=1)           # [R]
+        node = node * 2 + (xv > tv).astype(jnp.int32)
+    out_ref[...] += _onehot(node, leaf.shape[0]) @ leaf   # [R, out]
+
+
+def forest_predict_pallas(x, feat, thr_val, leaf, depth: int,
+                          rows_block: int = 256, interpret: bool = False):
+    """Same contract as ref.forest_predict_ref."""
+    n, p = x.shape
+    n_trees, n_heap = feat.shape
+    n_leaves, out = leaf.shape[1], leaf.shape[2]
+    rows_block = min(rows_block, n)
+    assert n % rows_block == 0, (n, rows_block)
+    grid = (n // rows_block, n_trees)
+    kernel = functools.partial(_predict_kernel, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_block, p), lambda r, t: (r, 0)),
+            pl.BlockSpec((1, n_heap), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, n_heap), lambda r, t: (t, 0)),
+            pl.BlockSpec((1, n_leaves, out), lambda r, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_block, out), lambda r, t: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, out), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), feat.astype(jnp.int32),
+      thr_val.astype(jnp.float32), leaf.astype(jnp.float32))

@@ -1,0 +1,383 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the cell's step function (train_step / prefill_step / decode_step,
+     or one distributed-forest boosting round for --arch caloforest) with
+     ShapeDtypeStruct stand-ins — no arrays are ever allocated,
+  3. compiles it (proving the sharding is coherent and collectives lower),
+  4. records memory_analysis (fits-in-HBM proof), raw cost_analysis, the HLO
+     collective inventory, and the analytic roofline terms (see
+     repro/analysis/flops.py for why FLOPs are analytic),
+  5. writes a JSON artifact to --out (default experiments/dryrun/).
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import flops as fl
+from repro.config import (LM_SHAPES, SHAPES_BY_NAME, ForestConfig,
+                          TrainConfig, shape_applicable)
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.sharding import rules
+from repro.train.optim import adamw_update
+
+_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
+
+# HLO instruction: %name = type[dims]{layout} op(operands). Async variants
+# (all-reduce-start) return tuples; count the first element's payload.
+_COLL_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2}
+
+
+def collective_inventory(hlo_text: str):
+    """Sum payload bytes of every collective op in the HLO, per op kind.
+
+    Collectives inside While bodies (the layer scan) appear once in the text;
+    the caller scales per-iteration entries by the known trip count. We
+    attribute an op to 'scanned' when its enclosing computation is not the
+    entry computation (scan bodies are emitted as named sub-computations).
+    """
+    per_kind = {}
+    scanned_flag = {}
+    current_comp = ""
+    entry = None
+    for line in hlo_text.splitlines():
+        header = re.match(r"\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
+        if header:
+            current_comp = header.group(2)
+            if header.group(1):
+                entry = current_comp
+            continue
+        for m in _COLL_RE.finditer(line):
+            dt, dims, kind = m.group(1), m.group(2), m.group(3)
+            if dt not in _TYPE_BYTES:
+                continue
+            size = _TYPE_BYTES[dt]
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            in_scan = current_comp != entry
+            key = (kind, in_scan)
+            per_kind[key] = per_kind.get(key, 0) + size
+    return {f"{k}{'.scanned' if s else ''}": v
+            for (k, s), v in per_kind.items()}
+
+
+def _scan_trip_count(cfg):
+    from repro.models import blocks
+    segs = blocks.segments_for(cfg)
+    return max(n for _, n in segs)
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             remat_policy: str = "full", mla_absorb: bool = False,
+             attn_impl: str = "blocked", layout: str = "2d",
+             moe_w8: bool = False, opt_bf16: bool = False,
+             tag: str = "") -> dict:
+    t0 = time.time()
+    from repro.models import attention as attn_mod
+    attn_mod._ATTN_IMPL = attn_impl
+    cfg = get_arch(arch_id)
+    if mla_absorb:
+        # frozen dataclass; decode path reads getattr(cfg, "mla_absorb", False)
+        object.__setattr__(cfg, "mla_absorb", True)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "remat": remat_policy, "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    dp, tp = rules.axes_for_mesh(multi_pod)
+    dp_size = chips // 16
+    tp_size = 16
+    if layout == "dp_only":
+        # small-model layout: pure data parallel — batch spans both axes,
+        # params FSDP over both axes, no tensor parallelism (no per-layer
+        # activation reduces). The smollm-135m hillclimb (§Perf).
+        dp = dp + (tp,)
+        dp_size = chips
+        tp = "model"       # unused: tp_size=1 below blocks tp assignment
+        tp_size = 1
+    dtype = jnp.bfloat16
+
+    specs = lm.input_specs(cfg, shape, dtype)
+
+    def _init():
+        params = lm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+        if moe_w8:
+            from repro.models.moe import quantize_expert_weights
+            for seg in params.get("segments", []):
+                for key, sub in seg.items():
+                    if isinstance(sub, dict) and "moe" in sub:
+                        sub["moe"] = quantize_expert_weights(sub["moe"])
+        return params
+
+    params_shape = jax.eval_shape(_init)
+    pspecs = rules.param_specs(params_shape, cfg, dp, tp, dp_size, tp_size)
+    p_shard = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), pspecs)
+
+    tcfg = TrainConfig(remat_policy=remat_policy)
+
+    if shape.kind == "train":
+        mdt = jnp.bfloat16 if opt_bf16 else jnp.float32
+        mom = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, mdt), params_shape)
+        opt_shape = {"m": mom, "v": mom,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_shard = {"m": p_shard, "v": p_shard,
+                     "step": jax.sharding.NamedSharding(
+                         mesh, jax.sharding.PartitionSpec())}
+        bspecs = rules.batch_specs(specs, dp, tp, dp_size)
+        b_shard = jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), bspecs)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, batch, cfg, dtype=dtype,
+                                     remat_policy=remat_policy),
+                has_aux=True)(params)
+            params, opt_state, om = adamw_update(grads, opt_state, params, tcfg)
+            return params, opt_state, loss
+
+        fn = jax.jit(train_step,
+                     in_shardings=(p_shard, opt_shard, b_shard),
+                     donate_argnums=(0, 1))
+        args = (params_shape, opt_shape, specs)
+    elif shape.kind == "prefill":
+        bspecs = rules.batch_specs(specs, dp, tp, dp_size)
+        b_shard = jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), bspecs)
+
+        def prefill(params, batch):
+            return lm.prefill_step(params, batch, cfg, dtype=dtype)
+
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        args = (params_shape, specs)
+    else:  # decode
+        cache_shape = specs["cache"]
+        cspecs = rules.cache_specs(cache_shape, dp, tp, dp_size, tp_size)
+        c_shard = jax.tree_util.tree_map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), cspecs)
+        tok_shard = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(
+                dp if shape.global_batch % dp_size == 0
+                and shape.global_batch > 1 else None, None))
+        pos_shard = jax.sharding.NamedSharding(mesh,
+                                               jax.sharding.PartitionSpec())
+
+        def decode(params, cache, tokens, pos):
+            return lm.decode_step(params, cache, tokens, pos, cfg,
+                                  dtype=dtype)
+
+        fn = jax.jit(decode,
+                     in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+                     donate_argnums=(1,))
+        args = (params_shape, cache_shape, specs["tokens"], specs["pos"])
+
+    try:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    except Exception as e:  # noqa - record the failure, don't crash the sweep
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        return rec
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # compiled.as_text() is post-SPMD classic HLO (collectives materialised);
+    # lowered.as_text() would be StableHLO with shardings still symbolic.
+    hlo = compiled.as_text()
+    inv = collective_inventory(hlo)
+    trips = _scan_trip_count(cfg)
+    coll_hlo = sum(v * (trips if k.endswith(".scanned") else 1)
+                   for k, v in inv.items())
+
+    acost = fl.cell_cost(cfg, shape, chips=chips, dp_size=dp_size,
+                         tp_size=tp_size, remat_policy=remat_policy,
+                         mla_absorb=mla_absorb,
+                         attn_packed=(attn_impl == "packed"),
+                         moe_w8=moe_w8)
+    roof = fl.roofline(acost, chips)
+
+    rec.update(
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        chips=chips,
+        memory_analysis={
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes_per_device": (
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)),
+            "repr": str(mem)[:2000],
+        },
+        cost_analysis_raw={k: cost.get(k) for k in
+                           ("flops", "bytes accessed", "transcendentals")
+                           if cost and k in cost},
+        collective_inventory=inv,
+        collective_bytes_hlo_scaled=coll_hlo,
+        scan_trip_count=trips,
+        analytic={
+            "fwd_flops": acost.fwd_flops,
+            "total_flops": acost.total_flops,
+            "hbm_bytes": acost.hbm_bytes,
+            "coll_bytes": acost.coll_bytes,
+            "model_flops": acost.model_flops,
+        },
+        roofline=roof,
+    )
+    return rec
+
+
+def run_forest_cell(dataset: str, multi_pod: bool, out_dir: Path,
+                    split_reduce: str = "allreduce", hist_bf16: bool = False,
+                    int8_codes: bool = False, tag: str = "") -> dict:
+    """caloforest: one distributed boosting slice at CaloChallenge scale."""
+    from repro.forest.distributed import (input_specs_forest,
+                                          make_distributed_fit)
+    t0 = time.time()
+    p = {"photons": 368, "pions": 533}[dataset]
+    n_rows = 122880          # ~121k padded to divide the data axes
+    fcfg = ForestConfig(n_t=100, duplicate_k=20, n_trees=2, max_depth=7,
+                        learning_rate=1.5, n_bins=64, reg_lambda=1.0,
+                        split_reduce=split_reduce, hist_bf16=hist_bf16,
+                        int8_codes=int8_codes)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    rec = {"arch": "caloforest", "shape": dataset,
+           "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
+           "split_reduce": split_reduce, "hist_bf16": hist_bf16}
+    try:
+        fit = make_distributed_fit(mesh, fcfg, data_axes=data_axes)
+        n_ens = 16  # one grid slice: 16 ensembles across the model axis
+        args = input_specs_forest(fcfg, n_rows, p, n_ens)
+        lowered = fit.lower(*args)
+        compiled = lowered.compile()
+    except Exception as e:
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        return rec
+    mem = compiled.memory_analysis()
+    inv = collective_inventory(compiled.as_text())
+    acost = fl.forest_cost(n_rows=n_rows, p=p, fcfg=fcfg, chips=chips,
+                           data_shards=(chips // 16 if not multi_pod
+                                        else chips // 16),
+                           out_dim=1)
+    roof = fl.roofline(acost, chips)
+    rec.update(
+        status="ok", compile_s=round(time.time() - t0, 1), chips=chips,
+        memory_analysis={"repr": str(mem)[:2000]},
+        collective_inventory=inv,
+        analytic={"total_flops": acost.total_flops,
+                  "hbm_bytes": acost.hbm_bytes,
+                  "coll_bytes": acost.coll_bytes},
+        roofline=roof,
+        note=("one 2-round ensemble slice; full run loops n_t*n_y/16 slices, "
+              "hist reduction over data axes is the only hot-loop collective"),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--attn", default="blocked",
+                    choices=("blocked", "packed"))
+    ap.add_argument("--layout", default="2d", choices=("2d", "dp_only"))
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--split-reduce", default="allreduce",
+                    choices=("allreduce", "reduce_scatter"))
+    ap.add_argument("--hist-bf16", action="store_true")
+    ap.add_argument("--int8-codes", action="store_true")
+    ap.add_argument("--moe-w8", action="store_true",
+                    help="int8 weight-only routed experts (decode cells)")
+    ap.add_argument("--opt-bf16", action="store_true",
+                    help="bf16 AdamW moments (halves optimizer HBM)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in LM_SHAPES:
+                cells.append((arch, shape.name))
+        cells.append(("caloforest", "photons"))
+        cells.append(("caloforest", "pions"))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        for mp in meshes:
+            if arch == "caloforest":
+                rec = run_forest_cell(shape, mp, out_dir,
+                                      split_reduce=args.split_reduce,
+                                      hist_bf16=args.hist_bf16,
+                                      int8_codes=args.int8_codes,
+                                      tag=args.tag)
+            else:
+                rec = run_cell(arch, shape, mp, out_dir,
+                               remat_policy=args.remat,
+                               mla_absorb=args.mla_absorb,
+                               attn_impl=args.attn, layout=args.layout,
+                               moe_w8=args.moe_w8, opt_bf16=args.opt_bf16,
+                               tag=args.tag)
+            suffix = ("multi" if mp else "single")
+            if args.tag:
+                suffix += f"_{args.tag}"
+            path = out_dir / f"{arch}_{shape}_{suffix}.json"
+            path.write_text(json.dumps(rec, indent=1, default=str))
+            status = rec["status"]
+            extra = ""
+            if status == "ok" and "roofline" in rec:
+                r = rec["roofline"]
+                extra = (f" dominant={r['dominant']}"
+                         f" mfu_bound={r['mfu_bound']:.3f}")
+            print(f"[{status}] {arch} x {shape} x {rec['mesh']}"
+                  f" ({rec.get('compile_s', '-')}s){extra}", flush=True)
+            if status == "failed":
+                print(rec["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

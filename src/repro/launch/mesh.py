@@ -1,0 +1,17 @@
+"""Production meshes. Defined as functions so importing never touches jax
+device state (the dry-run must set XLA_FLAGS before any initialisation)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256 chips, one v5e pod) or 2x16x16 (512 chips, two pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2):
+    """Small host-device mesh for tests (requires matching device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

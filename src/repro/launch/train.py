@@ -1,0 +1,77 @@
+"""Training launcher.
+
+CPU (this container): reduced configs, real optimisation:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
+      --steps 100 --ckpt-dir /tmp/ckpt
+
+TPU pod (production): full config on the 16x16 / 2x16x16 mesh — pass
+--mesh single|multi; parameters and batches are sharded with
+repro.sharding.rules. On real hardware also set:
+  REPRO_HIST_IMPL=pallas
+  LIBTPU_INIT_ARGS="--xla_tpu_enable_async_collective_fusion=true \
+     --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true"
+(the compute/comm-overlap flags; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.configs import ARCH_IDS, get_arch
+from repro.data.tokens import FastTokenStream
+from repro.train.loop import run_with_retries, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=args.steps // 10,
+                       total_steps=args.steps, remat_policy=args.remat)
+    stream = FastTokenStream(cfg.vocab, args.seq, args.batch, seed=0)
+
+    def data_fn(i):
+        b = stream.batch_at(i)
+        if cfg.family == "vlm":
+            import numpy as np
+            rng = np.random.default_rng(i)
+            n_img = cfg.n_patches
+            return {"patches": rng.normal(
+                        size=(args.batch, n_img, cfg.d_model)).astype("float32"),
+                    "tokens": b["tokens"], "labels": b["labels"]}
+        if cfg.family == "audio_encdec":
+            import numpy as np
+            rng = np.random.default_rng(i)
+            return {"frames": rng.normal(
+                        size=(args.batch, args.seq, cfg.d_model)).astype("float32"),
+                    "tokens": b["tokens"], "labels": b["labels"]}
+        return b
+
+    def job():
+        return train(cfg, tcfg, data_fn, steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     accum=args.accum)
+
+    params, opt_state, history = run_with_retries(job)
+    if history:
+        first, last = history[0]["loss"], history[-1]["loss"]
+        print(f"loss {first:.4f} -> {last:.4f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

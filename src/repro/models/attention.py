@@ -1,0 +1,393 @@
+"""Attention: GQA / MQA / local-window / MLA, training + prefill + cached decode.
+
+Training/prefill use a pure-JAX blocked online-softmax attention
+(:func:`mea_attention`) so the peak live intermediate is one
+``[B, heads, q_block, kv_block]`` tile instead of the quadratic ``[S, S]``
+score matrix — the same memory discipline the paper enforces for tabular
+arrays (never materialise the O(n_t · nK · p) object), applied to sequence
+length. The Pallas flash-attention kernel in ``repro/kernels/flash_attention``
+is the TPU production path; this module is the XLA path that the multi-pod
+dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, apply_rope
+
+NEG_INF = -1e30
+
+# 'blocked' (default): full-grid blocked attention (computes masked blocks).
+# 'packed': causal triangle packing — only the n_q(n_q+1)/2 visible block
+# pairs are computed, realising the S^2/2 causal FLOP saving (§Perf).
+_ATTN_IMPL = os.environ.get("REPRO_ATTN_IMPL", "blocked")
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (XLA path)
+# ---------------------------------------------------------------------------
+
+def _attn_reference(q, k, v, causal: bool, window: int, q_offset: int):
+    """Naive attention; used for short sequences and as the test oracle.
+
+    q: [B, Hq, Sq, d], k/v: [B, Hkv, Skv, d] with Hq = G*Hkv.
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / jnp.sqrt(d).astype(jnp.float32)
+    skv = k.shape[2]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def mea_attention_packed(q, k, v, *, block: int = 1024):
+    """Causal attention over only the visible block pairs.
+
+    Scans the flattened lower-triangle [(i, j) for i in q_blocks for j <= i]
+    — nq(nq+1)/2 pairs instead of nq*nkv — so the compiled FLOPs are S^2/2 +
+    diagonal, the real causal saving the blocked path masks away. Running
+    (acc, m, l) statistics for every q block live across the scan (fp32,
+    output-sized). Requires Sq == Skv (self-attention training/prefill).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    block = min(block, sq)
+    assert sq % block == 0, (sq, block)
+    nb = sq // block
+    qp = q.reshape(b, hkv, g, nb, block, d)
+    kp = k.reshape(b, hkv, nb, block, d)
+    vp = v.reshape(b, hkv, nb, block, d)
+    scale = 1.0 / (d ** 0.5)
+    pairs = jnp.asarray([(i, j) for i in range(nb) for j in range(i + 1)],
+                        jnp.int32)
+
+    acc0 = jnp.zeros((nb, b, hkv, g, block, d), jnp.float32)
+    m0 = jnp.full((nb, b, hkv, g, block), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nb, b, hkv, g, block), jnp.float32)
+    diag = (jnp.arange(block)[:, None] >= jnp.arange(block)[None, :])
+
+    def step(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qb = qp[:, :, :, i].astype(jnp.float32) * scale
+        kb = kp[:, :, j].astype(jnp.float32)
+        vb = vp[:, :, j].astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb)
+        s = jnp.where((i == j) & ~diag[None, None, None], NEG_INF, s)
+        mi = m[i]
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))
+        alpha = jnp.exp(mi - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l[i] * alpha + jnp.sum(p, axis=-1)
+        a_new = acc[i] * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb)
+        return (acc.at[i].set(a_new), m.at[i].set(m_new),
+                l.at[i].set(l_new)), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), pairs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 0, 3)  # [b, hkv, g, nb, block, d]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def mea_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_block: int = 512, kv_block: int = 1024, q_offset: int = 0):
+    """Memory-efficient attention with GQA head grouping.
+
+    q: [B, Hq, Sq, d]; k, v: [B, Hkv, Skv, d].
+    Online softmax over kv blocks inside a scan over q blocks; fp32 running
+    statistics. ``window > 0`` adds a sliding-window band to the causal mask.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if (_ATTN_IMPL == "packed" and causal and window <= 0 and sq == skv
+            and q_offset == 0 and sq > kv_block):
+        return mea_attention_packed(q, k, v, block=kv_block)
+    if sq <= q_block and skv <= kv_block:
+        return _attn_reference(q, k, v, causal, window, q_offset)
+    g = hq // hkv
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    # Pad to block multiples (static shapes).
+    sq_p = -(-sq // q_block) * q_block
+    skv_p = -(-skv // kv_block) * kv_block
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    qp = qp.reshape(b, hkv, g, sq_p // q_block, q_block, d)
+    kp = kp.reshape(b, hkv, skv_p // kv_block, kv_block, d)
+    vp = vp.reshape(b, hkv, skv_p // kv_block, kv_block, d)
+    n_q, n_kv = sq_p // q_block, skv_p // kv_block
+    scale = 1.0 / (d ** 0.5)
+
+    kv_valid = jnp.arange(skv_p) < skv  # mask padded kv rows
+
+    def q_step(_, qi):
+        qb = qp[:, :, :, qi] * scale  # [b, hkv, g, qblk, d]
+        q_pos = qi * q_block + jnp.arange(q_block) + q_offset
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb = kp[:, :, ki]
+            vb = vp[:, :, ki]
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qb.astype(jnp.float32), kb.astype(jnp.float32)
+            )
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            msk = kv_valid[ki * kv_block + jnp.arange(kv_block)][None, :]
+            if causal:
+                msk = msk & (q_pos[:, None] >= k_pos[None, :])
+            if window > 0:
+                msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, g, q_block, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        if causal and window <= 0:
+            # Only kv blocks at or before this q block contribute.
+            n_needed = jnp.minimum(
+                ( (qi + 1) * q_block + q_offset + kv_block - 1) // kv_block, n_kv)
+        else:
+            n_needed = n_kv
+
+        def masked_kv_step(carry, ki):
+            new_carry, _ = kv_step(carry, ki)
+            take = ki < n_needed
+            carry = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(take, n, o), new_carry, carry)
+            return carry, None
+
+        (acc, m, l), _ = jax.lax.scan(
+            masked_kv_step, (acc0, m0, l0), jnp.arange(n_kv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(n_q))
+    # outs: [n_q, b, hkv, g, q_block, d]
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq_p, d)
+    out = out.reshape(b, hq, sq_p, d)[:, :, :sq]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (params + apply)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+             dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    so = (n_heads * d_head) ** -0.5
+    return {
+        "wq": _normal(k1, (d_model, n_heads, d_head), s, dtype),
+        "wk": _normal(k2, (d_model, n_kv, d_head), s, dtype),
+        "wv": _normal(k3, (d_model, n_kv, d_head), s, dtype),
+        "wo": _normal(k4, (n_heads, d_head, d_model), so, dtype),
+    }
+
+
+def apply_gqa(p, x, positions, *, theta: float, causal: bool = True,
+              window: int = 0, rope: bool = True,
+              cache: Optional[dict] = None, cache_index=None,
+              cross_kv: Optional[tuple] = None):
+    """GQA attention.
+
+    Training/prefill: ``cache is None`` → full-sequence blocked attention; if
+    the caller wants a cache back it uses :func:`make_kv_cache` + the returned
+    k/v. Decode: ``cache`` holds k/v of shape [B, Hkv, S_cache, d]; the new
+    token's kv is written at ``cache_index``.
+    ``cross_kv``: (k, v) from an encoder — used by whisper's cross-attention
+    (keys are precomputed; no cache update).
+    """
+    dt = x.dtype
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(dt))
+    if cross_kv is not None:
+        k, v = cross_kv
+    else:
+        k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(dt))
+        if rope:
+            q = jnp.swapaxes(apply_rope(jnp.swapaxes(q, 1, 2), positions, theta), 1, 2)
+            k = jnp.swapaxes(apply_rope(jnp.swapaxes(k, 1, 2), positions, theta), 1, 2)
+
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        # decode: s == 1; insert at cache_index (ring-buffer for windowed attn)
+        size = cache["k"].shape[2]
+        idx = cache_index % size if window > 0 else cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, idx, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, idx, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(dt), cv.astype(dt)
+        out = _decode_attention(q, k, v, cache_index, window)
+    elif cache is not None and cross_kv is not None:
+        new_cache = cache
+        out = mea_attention(q, k, v, causal=False)
+    else:
+        q_off = 0
+        out = mea_attention(q, k, v, causal=causal, window=window, q_offset=q_off)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dt))
+    if cache is not None:
+        return y, new_cache
+    return y, (k, v)
+
+
+def _decode_attention(q, k, v, cache_index, window: int):
+    """Single-token attention against a cache. q: [B,Hq,1,d], k/v: [B,Hkv,S,d]."""
+    b, hq, _, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, 1, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    scores = scores / (d ** 0.5)
+    kpos = jnp.arange(s)
+    if window > 0:
+        # ring buffer: valid entries are the window positions written so far
+        valid = kpos < jnp.minimum(cache_index + 1, s)
+    else:
+        valid = kpos <= cache_index
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def make_kv_cache(batch: int, n_kv: int, size: int, d_head: int, dtype):
+    return {
+        "k": jnp.zeros((batch, n_kv, size, d_head), dtype),
+        "v": jnp.zeros((batch, n_kv, size, d_head), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope_d, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    s = d ** -0.5
+    return {
+        "wq_a": _normal(ks[0], (d, qr), s, dtype),
+        "q_norm": {"scale": jnp.ones((qr,), dtype)},
+        "wq_b": _normal(ks[1], (qr, h, nope + rope_d), qr ** -0.5, dtype),
+        "wkv_a": _normal(ks[2], (d, kvr), s, dtype),
+        "kv_norm": {"scale": jnp.ones((kvr,), dtype)},
+        "wk_rope": _normal(ks[3], (d, rope_d), s, dtype),
+        "wk_b": _normal(ks[4], (kvr, h, nope), kvr ** -0.5, dtype),
+        "wv_b": _normal(ks[5], (kvr, h, vd), kvr ** -0.5, dtype),
+        "wo": _normal(ks[6], (h, vd, d), (h * vd) ** -0.5, dtype),
+    }
+
+
+def apply_mla(p, x, positions, cfg, *, cache: Optional[dict] = None,
+              cache_index=None, absorb: bool = False):
+    """MLA attention. Cache stores the compressed latent + shared rope key:
+    ``{"c": [B, S, kv_lora], "k_rope": [B, S, rope_d]}`` — the memory win that
+    motivates MLA.
+
+    ``absorb``: decode-time low-rank absorption (fold wk_b into the query and
+    wv_b into the output) so per-step FLOPs scale with kv_lora, not with
+    expanding the full K/V — a beyond-paper perf optimisation (§Perf).
+    """
+    from repro.models.layers import apply_norm  # local import to avoid cycle
+
+    dt = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d = cfg.nope_head_dim, cfg.rope_head_dim
+
+    ql = apply_norm(p["q_norm"], x @ p["wq_a"].astype(dt), "rmsnorm")
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c = apply_norm(p["kv_norm"], x @ p["wkv_a"].astype(dt), "rmsnorm")  # [b,s,kvr]
+    k_rope = apply_rope((x @ p["wk_rope"].astype(dt))[:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]  # [b,s,rope_d]
+
+    new_cache = None
+    if cache is not None:
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c"], c.astype(cache["c"].dtype), (0, cache_index, 0))
+        kr_all = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_index, 0))
+        new_cache = {"c": c_all, "k_rope": kr_all}
+        skv = c_all.shape[1]
+        valid = jnp.arange(skv) <= cache_index
+        if absorb:
+            # scores = q_nope^T (wk_b c) = (wk_b^T q_nope)^T c : do the small side
+            q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(dt))
+            s_nope = jnp.einsum("bshr,btr->bhst", q_eff, c_all.astype(dt))
+            s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_all.astype(dt))
+            scores = (s_nope + s_rope).astype(jnp.float32) / ((nope + rope_d) ** 0.5)
+            scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+            w = jax.nn.softmax(scores, axis=-1).astype(dt)
+            ctx = jnp.einsum("bhst,btr->bshr", w, c_all.astype(dt))
+            out = jnp.einsum("bshr,rhv->bshv", ctx, p["wv_b"].astype(dt))
+        else:
+            k_nope = jnp.einsum("btr,rhk->bthk", c_all.astype(dt), p["wk_b"].astype(dt))
+            vv = jnp.einsum("btr,rhv->bthv", c_all.astype(dt), p["wv_b"].astype(dt))
+            s_nope = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+            s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_all.astype(dt))
+            scores = (s_nope + s_rope).astype(jnp.float32) / ((nope + rope_d) ** 0.5)
+            scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+            w = jax.nn.softmax(scores, axis=-1).astype(dt)
+            out = jnp.einsum("bhst,bthv->bshv", w, vv)
+        y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+        return y, new_cache
+
+    # training / prefill: expand k/v and use blocked attention
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhv->bshv", c, p["wv_b"].astype(dt))
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope_d))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    vd = cfg.v_head_dim
+    pad = nope + rope_d - vd
+    v_padded = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
+    out = mea_attention(jnp.swapaxes(q_full, 1, 2), jnp.swapaxes(k_full, 1, 2),
+                        jnp.swapaxes(v_padded, 1, 2), causal=True)
+    out = jnp.swapaxes(out, 1, 2)[..., :vd]
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+    return y, (c, k_rope)
+
+
+def make_mla_cache(batch: int, size: int, cfg, dtype):
+    return {
+        "c": jnp.zeros((batch, size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, size, cfg.rope_head_dim), dtype),
+    }

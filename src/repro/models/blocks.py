@@ -1,0 +1,395 @@
+"""Block assembly: per-layer-kind init/apply + scan-over-layers segments.
+
+Every architecture is described as a list of *segments*; a segment is a
+repeating group of layer kinds scanned with stacked weights, so HLO size is
+O(1) in depth (fast compiles, PP-ready structure):
+
+    dense:        [(("dense",), n_layers)]
+    dbrx:         [(("moe",), n_layers)]
+    deepseek-v2:  [(("mla_dense",), 1), (("mla_moe",), n_layers - 1)]
+    xlstm:        [(7 x "mlstm" + "slstm", n_layers // 8)]
+    recurrentgemma: [(("rec","rec","attn"), 12), (("rec","rec"), 1)]
+    whisper:      encoder [("enc",), L] and decoder [("dec",), L] stacks
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import attention as attn
+from repro.models import recurrent as rec
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.moe import apply_moe, init_moe, init_shared_experts
+
+
+def segments_for(cfg: ArchConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    if cfg.family in ("dense", "vlm"):
+        return [(("dense",), cfg.n_layers)]
+    if cfg.family == "moe":
+        return [(("moe",), cfg.n_layers)]
+    if cfg.family == "mla_moe":
+        segs = []
+        if cfg.first_k_dense:
+            segs.append((("mla_dense",), cfg.first_k_dense))
+        segs.append((("mla_moe",), cfg.n_layers - cfg.first_k_dense))
+        return segs
+    if cfg.family == "ssm":
+        plen = len(cfg.pattern)
+        assert cfg.n_layers % plen == 0, "ssm layers must tile the pattern"
+        return [(tuple(cfg.pattern), cfg.n_layers // plen)]
+    if cfg.family == "hybrid":
+        plen = len(cfg.pattern)
+        n_full = cfg.n_layers // plen
+        segs = [(tuple(cfg.pattern), n_full)]
+        rem = cfg.n_layers - n_full * plen
+        if rem:
+            segs.append((tuple(cfg.pattern[:rem]), 1))
+        return segs
+    if cfg.family == "audio_encdec":
+        # handled by whisper.py (two stacks)
+        return [(("enc",), cfg.n_layers), (("dec",), cfg.n_layers)]
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# per-kind init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, kind: str, dtype=jnp.float32) -> Dict:
+    k = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Dict = {}
+    if kind in ("dense", "moe", "enc", "lattn", "attn"):
+        p["norm_attn"] = init_norm(d, cfg.norm, dtype)
+        p["attn"] = attn.init_gqa(k[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.d_head, dtype)
+    if kind in ("mla_dense", "mla_moe"):
+        p["norm_attn"] = init_norm(d, cfg.norm, dtype)
+        p["attn"] = attn.init_mla(k[0], cfg, dtype)
+    if kind == "dec":
+        p["norm_attn"] = init_norm(d, cfg.norm, dtype)
+        p["attn"] = attn.init_gqa(k[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.d_head, dtype)
+        p["norm_cross"] = init_norm(d, cfg.norm, dtype)
+        p["cross"] = attn.init_gqa(k[3], d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.d_head, dtype)
+    if kind in ("dense", "enc", "dec", "lattn", "attn", "mla_dense"):
+        p["norm_mlp"] = init_norm(d, cfg.norm, dtype)
+        ff = cfg.d_ff_dense if (kind == "mla_dense" and cfg.d_ff_dense) else cfg.d_ff
+        p["mlp"] = init_mlp(k[1], d, ff, cfg.act, dtype)
+    if kind == "moe":
+        p["norm_mlp"] = init_norm(d, cfg.norm, dtype)
+        p["moe"] = init_moe(k[1], d, cfg.d_ff_expert, cfg.n_experts, cfg.act, dtype)
+    if kind == "mla_moe":
+        p["norm_mlp"] = init_norm(d, cfg.norm, dtype)
+        p["moe"] = init_moe(k[1], d, cfg.d_ff_expert, cfg.n_experts, cfg.act, dtype)
+        if cfg.n_shared_experts:
+            p["shared"] = init_shared_experts(k[2], d, cfg.d_ff_expert,
+                                              cfg.n_shared_experts, cfg.act, dtype)
+    if kind == "rec":
+        p["norm_rec"] = init_norm(d, cfg.norm, dtype)
+        p["rec"] = rec.init_rglru_block(k[0], d, cfg.rnn_width,
+                                        cfg.conv1d_width, dtype)
+        p["norm_mlp"] = init_norm(d, cfg.norm, dtype)
+        p["mlp"] = init_mlp(k[1], d, cfg.d_ff, cfg.act, dtype)
+    if kind == "mlstm":
+        p["norm"] = init_norm(d, cfg.norm, dtype)
+        p["block"] = rec.init_mlstm_block(k[0], d, cfg.rnn_width, cfg.n_heads,
+                                          cfg.conv1d_width, dtype)
+    if kind == "slstm":
+        p["norm"] = init_norm(d, cfg.norm, dtype)
+        p["block"] = rec.init_slstm_block(k[0], d, cfg.n_heads, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-kind apply (full sequence: training / prefill)
+# ---------------------------------------------------------------------------
+
+def apply_layer(p, x, positions, cfg: ArchConfig, kind: str, *,
+                enc_out=None, collect_kv: bool = False,
+                moe_cf: Optional[float] = None):
+    """Residual layer body over a full sequence.
+
+    Returns (x, aux_loss, kv) where kv is the per-layer cache contribution
+    when ``collect_kv`` (prefill), else None. ``moe_cf`` overrides the MoE
+    capacity factor (prefill uses the no-drop E/k; training drops at 1.25).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if kind in ("dense", "moe", "enc", "attn"):
+        h, kv_pair = attn.apply_gqa(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm), positions,
+            theta=cfg.rope_theta, causal=(kind != "enc"),
+            rope=(kind != "enc"))
+        x = x + h
+        if collect_kv:
+            kv = {"k": kv_pair[0], "v": kv_pair[1]}
+    elif kind == "lattn":
+        h, kv_pair = attn.apply_gqa(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm), positions,
+            theta=cfg.rope_theta, causal=True, window=cfg.attn_window)
+        x = x + h
+        if collect_kv:
+            kv = {"k": kv_pair[0][:, :, -cfg.attn_window:],
+                  "v": kv_pair[1][:, :, -cfg.attn_window:]}
+    elif kind in ("mla_dense", "mla_moe"):
+        h, kv_pair = attn.apply_mla(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm), positions, cfg)
+        x = x + h
+        if collect_kv:
+            kv = {"c": kv_pair[0], "k_rope": kv_pair[1]}
+    elif kind == "dec":
+        h, kv_pair = attn.apply_gqa(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm), positions,
+            theta=cfg.rope_theta, causal=True, rope=False)
+        x = x + h
+        if collect_kv:
+            kv = {"k": kv_pair[0], "v": kv_pair[1]}
+        dt = x.dtype
+        ck = jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wk"].astype(dt))
+        cv = jnp.einsum("bsd,dhk->bhsk", enc_out, p["cross"]["wv"].astype(dt))
+        h, _ = attn.apply_gqa(
+            p["cross"], apply_norm(p["norm_cross"], x, cfg.norm), positions,
+            theta=cfg.rope_theta, causal=False, rope=False, cross_kv=(ck, cv))
+        x = x + h
+        if collect_kv:
+            kv["cross_k"], kv["cross_v"] = ck, cv
+    elif kind == "rec":
+        res = rec.apply_rglru_block(
+            p["rec"], apply_norm(p["norm_rec"], x, cfg.norm),
+            return_state=collect_kv)
+        if collect_kv:
+            h, kv = res
+        else:
+            h = res
+        x = x + h
+    elif kind == "mlstm":
+        res = rec.apply_mlstm_block(p["block"], apply_norm(p["norm"], x, cfg.norm),
+                                    cfg.n_heads, return_state=collect_kv)
+        if collect_kv:
+            h, kv = res
+        else:
+            h = res
+        return x + h, aux, kv
+    elif kind == "slstm":
+        res = rec.apply_slstm_block(p["block"], apply_norm(p["norm"], x, cfg.norm),
+                                    cfg.n_heads, return_state=collect_kv)
+        if collect_kv:
+            h, kv = res
+        else:
+            h = res
+        return x + h, aux, kv
+    else:
+        raise ValueError(kind)
+
+    # FFN / MoE half
+    if kind in ("dense", "enc", "dec", "lattn", "attn", "mla_dense", "rec"):
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm_mlp"], x, cfg.norm), cfg.act)
+    elif kind == "moe":
+        kw = {} if moe_cf is None else {"capacity_factor": moe_cf}
+        y, a = apply_moe(p["moe"], apply_norm(p["norm_mlp"], x, cfg.norm),
+                         n_experts=cfg.n_experts, top_k=cfg.top_k, act=cfg.act,
+                         **kw)
+        x = x + y
+        aux = aux + a
+    elif kind == "mla_moe":
+        kw = {} if moe_cf is None else {"capacity_factor": moe_cf}
+        xin = apply_norm(p["norm_mlp"], x, cfg.norm)
+        y, a = apply_moe(p["moe"], xin, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, act=cfg.act, **kw)
+        if "shared" in p:
+            y = y + apply_mlp(p["shared"], xin, cfg.act)
+        x = x + y
+        aux = aux + a
+    return x, aux, kv
+
+
+# ---------------------------------------------------------------------------
+# per-kind apply (single-token decode against cache/state)
+# ---------------------------------------------------------------------------
+
+def apply_layer_decode(p, x, pos, cfg: ArchConfig, kind: str, cache):
+    """x: [B, 1, D]. cache: this layer's cache pytree. Returns (x, new_cache)."""
+    if kind in ("dense", "moe", "attn", "lattn", "dec"):
+        window = cfg.attn_window if kind == "lattn" else 0
+        h, new_kv = attn.apply_gqa(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm),
+            jnp.full((x.shape[0], 1), pos, jnp.int32),
+            theta=cfg.rope_theta, causal=True, window=window,
+            rope=(kind != "dec"),
+            cache={"k": cache["k"], "v": cache["v"]}, cache_index=pos)
+        x = x + h
+        new_cache = dict(cache)
+        new_cache.update(new_kv)
+        if kind == "dec":
+            h, _ = attn.apply_gqa(
+                p["cross"], apply_norm(p["norm_cross"], x, cfg.norm),
+                jnp.zeros((x.shape[0], 1), jnp.int32),
+                theta=cfg.rope_theta, causal=False, rope=False,
+                cross_kv=(cache["cross_k"], cache["cross_v"]))
+            x = x + h
+    elif kind in ("mla_dense", "mla_moe"):
+        h, new_kv = attn.apply_mla(
+            p["attn"], apply_norm(p["norm_attn"], x, cfg.norm),
+            jnp.full((x.shape[0], 1), pos, jnp.int32), cfg,
+            cache={"c": cache["c"], "k_rope": cache["k_rope"]},
+            cache_index=pos, absorb=getattr(cfg, "mla_absorb", False))
+        x = x + h
+        new_cache = dict(new_kv)
+    elif kind == "rec":
+        h, new_cache = rec.apply_rglru_decode(
+            p["rec"], apply_norm(p["norm_rec"], x, cfg.norm), cache)
+        x = x + h
+    elif kind == "mlstm":
+        h, new_cache = rec.apply_mlstm_decode(
+            p["block"], apply_norm(p["norm"], x, cfg.norm), cache, cfg.n_heads)
+        return x + h, new_cache
+    elif kind == "slstm":
+        h, new_cache = rec.apply_slstm_decode(
+            p["block"], apply_norm(p["norm"], x, cfg.norm), cache, cfg.n_heads)
+        return x + h, new_cache
+    else:
+        raise ValueError(kind)
+
+    if kind in ("dense", "attn", "lattn", "dec", "mla_dense", "rec"):
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm_mlp"], x, cfg.norm), cfg.act)
+    elif kind == "moe":
+        # decode: capacity == batch so no token is ever dropped at s=1
+        cf = float(cfg.n_experts) / cfg.top_k
+        y, _ = apply_moe(p["moe"], apply_norm(p["norm_mlp"], x, cfg.norm),
+                         n_experts=cfg.n_experts, top_k=cfg.top_k, act=cfg.act,
+                         group_size=x.shape[0], capacity_factor=cf)
+        x = x + y
+    elif kind == "mla_moe":
+        cf = float(cfg.n_experts) / cfg.top_k
+        xin = apply_norm(p["norm_mlp"], x, cfg.norm)
+        y, _ = apply_moe(p["moe"], xin, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, act=cfg.act,
+                         group_size=x.shape[0], capacity_factor=cf)
+        if "shared" in p:
+            y = y + apply_mlp(p["shared"], xin, cfg.act)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache init per kind
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ArchConfig, kind: str, batch: int, size: int, dtype,
+                     enc_len: int = 0):
+    if kind in ("dense", "moe", "attn"):
+        return attn.make_kv_cache(batch, cfg.n_kv_heads, size, cfg.d_head, dtype)
+    if kind == "lattn":
+        return attn.make_kv_cache(batch, cfg.n_kv_heads,
+                                  min(size, cfg.attn_window), cfg.d_head, dtype)
+    if kind in ("mla_dense", "mla_moe"):
+        return attn.make_mla_cache(batch, size, cfg, dtype)
+    if kind == "dec":
+        c = attn.make_kv_cache(batch, cfg.n_kv_heads, size, cfg.d_head, dtype)
+        c["cross_k"] = jnp.zeros((batch, cfg.n_kv_heads, enc_len, cfg.d_head), dtype)
+        c["cross_v"] = jnp.zeros((batch, cfg.n_kv_heads, enc_len, cfg.d_head), dtype)
+        return c
+    if kind == "rec":
+        return rec.rglru_init_state(batch, cfg.rnn_width, cfg.conv1d_width, dtype)
+    if kind == "mlstm":
+        return rec.mlstm_init_state(batch, cfg.rnn_width, cfg.n_heads,
+                                    cfg.conv1d_width)
+    if kind == "slstm":
+        return rec.slstm_init_state(batch, cfg.d_model, cfg.n_heads)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# segment scan
+# ---------------------------------------------------------------------------
+
+def init_segment(key, cfg: ArchConfig, kinds: Tuple[str, ...], n_groups: int,
+                 dtype=jnp.float32):
+    """Stacked params: one pytree whose leaves have leading dim n_groups."""
+
+    def one_group(k):
+        ks = jax.random.split(k, len(kinds))
+        return {f"{i}_{kind}": init_layer(ks[i], cfg, kind, dtype)
+                for i, kind in enumerate(kinds)}
+
+    keys = jax.random.split(key, n_groups)
+    groups = [one_group(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def apply_segment(seg_params, x, positions, cfg: ArchConfig,
+                  kinds: Tuple[str, ...], *, remat_policy: str = "full",
+                  enc_out=None):
+    """Scan the segment over its stacked groups. Returns (x, aux_sum)."""
+
+    def group_body(carry, gp):
+        xc, aux = carry
+        for i, kind in enumerate(kinds):
+            xc, a, _ = apply_layer(gp[f"{i}_{kind}"], xc, positions, cfg, kind,
+                                   enc_out=enc_out)
+            aux = aux + a
+        return (xc, aux), None
+
+    body = _remat(group_body, remat_policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), seg_params)
+    return x, aux
+
+
+def apply_segment_prefill(seg_params, x, positions, cfg: ArchConfig,
+                          kinds: Tuple[str, ...], *, enc_out=None):
+    """Full-sequence forward that also emits the per-layer cache (stacked)."""
+
+    no_drop_cf = float(cfg.n_experts) / cfg.top_k if cfg.n_experts else None
+
+    def group_body(xc, gp):
+        kvs = {}
+        for i, kind in enumerate(kinds):
+            key = f"{i}_{kind}"
+            xc, _, kv = apply_layer(gp[key], xc, positions, cfg, kind,
+                                    enc_out=enc_out, collect_kv=True,
+                                    moe_cf=no_drop_cf)
+            kvs[key] = kv
+        return xc, kvs
+
+    x, cache = jax.lax.scan(group_body, x, seg_params)
+    return x, cache
+
+
+def apply_segment_decode(seg_params, seg_cache, x, pos, cfg: ArchConfig,
+                         kinds: Tuple[str, ...]):
+    """Scanned decode step; caches are stacked like params."""
+
+    def group_body(xc, scan_in):
+        gp, gc = scan_in
+        new_gc = {}
+        for i, kind in enumerate(kinds):
+            key = f"{i}_{kind}"
+            xc, new_gc[key] = apply_layer_decode(gp[key], xc, pos, cfg, kind,
+                                                 gc[key])
+        return xc, new_gc
+
+    x, new_cache = jax.lax.scan(group_body, x, (seg_params, seg_cache))
+    return x, new_cache
+
+
+def init_segment_cache(cfg: ArchConfig, kinds: Tuple[str, ...], n_groups: int,
+                       batch: int, size: int, dtype, enc_len: int = 0):
+    one = {f"{i}_{kind}": init_layer_cache(cfg, kind, batch, size, dtype, enc_len)
+           for i, kind in enumerate(kinds)}
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape).copy(), one)

@@ -1,0 +1,125 @@
+"""Core layers: norms, MLPs, embeddings, RoPE — pure-JAX, explicit params.
+
+Parameters are plain nested dicts of ``jnp.ndarray``; init functions build
+them, apply functions consume them. Weights are stored in ``param_dtype``
+(fp32 master) and cast to the compute dtype at the point of use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    """RMSNorm / LayerNorm with fp32 statistics."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    if act in ("swiglu", "geglu"):
+        return {
+            "wi": _normal(k1, (d, f), s_in, dtype),
+            "wg": _normal(k2, (d, f), s_in, dtype),
+            "wo": _normal(k3, (f, d), s_out, dtype),
+        }
+    return {
+        "wi": _normal(k1, (d, f), s_in, dtype),
+        "wo": _normal(k3, (f, d), s_out, dtype),
+    }
+
+
+def apply_mlp(p, x, act: str):
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(dt)) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"tokens": _normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embed_tokens(p, tokens, dtype):
+    return jnp.take(p["tokens"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p_embed, p_head, x, tie: bool):
+    """Project to logits in fp32 for a stable softmax-xent."""
+    xf = x
+    if tie:
+        w = p_embed["tokens"].astype(x.dtype)
+        return (xf @ w.T).astype(jnp.float32)
+    return (xf @ p_head["w"].astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, n_heads, d_head]; positions: [..., S] int32."""
+    d_head = x.shape[-1]
+    inv = jnp.asarray(rope_frequencies(d_head, theta))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., S, d/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    """Mean cross entropy. logits [..., V] fp32, labels [...] int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,272 @@
+"""Top-level LM assembly: init, train loss, prefill, decode, input specs.
+
+One module serves all ten assigned architectures; ``ArchConfig.family``
+selects the segment program (see blocks.py). The three step functions lowered
+by the multi-pod dry-run live here:
+
+* ``loss_fn``      — full train-step objective (xent over next tokens)
+* ``prefill_step`` — full-sequence forward emitting logits + KV/state cache
+* ``decode_step``  — one new token against a seq_len-sized cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import blocks
+from repro.models.layers import embed_tokens, init_embed, init_norm, apply_norm, _normal
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 8)
+    params: Dict = {"embed": init_embed(ks[0], cfg.vocab, cfg.d_model, dtype)}
+    if cfg.family == "audio_encdec":
+        params["enc_segments"] = [
+            blocks.init_segment(ks[1], cfg, ("enc",), cfg.n_layers, dtype)]
+        params["dec_segments"] = [
+            blocks.init_segment(ks[2], cfg, ("dec",), cfg.n_layers, dtype)]
+        params["enc_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+    else:
+        segs = blocks.segments_for(cfg)
+        params["segments"] = [
+            blocks.init_segment(jax.random.fold_in(ks[1], i), cfg, kinds, n, dtype)
+            for i, (kinds, n) in enumerate(segs)]
+    params["final_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": _normal(ks[3], (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5,
+                         dtype)}
+    return params
+
+
+def _head_weight(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"]["tokens"].T
+    return params["lm_head"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def chunked_xent(x, w, labels, mask, chunk: int = 2048):
+    """Cross entropy without materialising [B, S, V] logits.
+
+    x: [B, S, D] activations; w: [D, V]; labels [B, S] int32; mask [B, S].
+    Scans over S in ``chunk``-sized slices — the same never-materialise-the-
+    big-array discipline the paper applies to its [n_t, nK, p] tensor.
+    """
+    b, s, d = x.shape
+    if s <= chunk:
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        per_tok = (logz - gold) * mask
+        return jnp.sum(per_tok) / jnp.maximum(jnp.sum(mask), 1.0)
+    n_chunks = s // chunk
+    assert n_chunks * chunk == s, f"seq {s} not divisible by chunk {chunk}"
+    xs = jnp.moveaxis(x.reshape(b, n_chunks, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, n_chunks, chunk), 1, 0)
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = (xc @ w.astype(xc.dtype)).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + jnp.sum((logz - gold) * mc), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _sinusoidal(positions, d):
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * jnp.asarray(freqs)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# forward bodies
+# ---------------------------------------------------------------------------
+
+def _backbone(params, x, positions, cfg, remat_policy):
+    aux = jnp.zeros((), jnp.float32)
+    for (kinds, _), seg in zip(blocks.segments_for(cfg), params["segments"]):
+        x, a = blocks.apply_segment(seg, x, positions, cfg, kinds,
+                                    remat_policy=remat_policy)
+        aux = aux + a
+    return apply_norm(params["final_norm"], x, cfg.norm), aux
+
+
+def _encode(params, frames, cfg, remat_policy):
+    pos = jnp.arange(frames.shape[1])[None]
+    x = frames + _sinusoidal(pos, cfg.d_model).astype(frames.dtype)
+    for seg in params["enc_segments"]:
+        x, _ = blocks.apply_segment(seg, x, pos, cfg, ("enc",),
+                                    remat_policy=remat_policy)
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, dtype=jnp.bfloat16,
+            remat_policy: str = "full", aux_weight: float = 0.01):
+    """Train objective. Returns (loss, metrics)."""
+    if cfg.family == "audio_encdec":
+        frames = batch["frames"].astype(dtype)
+        enc_out = _encode(params, frames, cfg, remat_policy)
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens, dtype)
+        x = x + _sinusoidal(jnp.arange(x.shape[1])[None], cfg.d_model).astype(dtype)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], tokens.shape)
+        aux = jnp.zeros((), jnp.float32)
+        for seg in params["dec_segments"]:
+            x, a = blocks.apply_segment(seg, x, pos, cfg, ("dec",),
+                                        remat_policy=remat_policy,
+                                        enc_out=enc_out)
+            aux = aux + a
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+    elif cfg.family == "vlm":
+        tokens = batch["tokens"]
+        tok_emb = embed_tokens(params["embed"], tokens, dtype)
+        x = jnp.concatenate([batch["patches"].astype(dtype), tok_emb], axis=1)
+        s = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (x.shape[0], s))
+        x, aux = _backbone(params, x, pos, cfg, remat_policy)
+        n_img = batch["patches"].shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((tokens.shape[0], n_img), -1, jnp.int32), batch["labels"]],
+            axis=1)
+        mask = (labels >= 0).astype(jnp.float32)
+    else:
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens, dtype)
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+        x, aux = _backbone(params, x, pos, cfg, remat_policy)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+
+    w = _head_weight(params, cfg)
+    safe_labels = jnp.maximum(labels, 0)
+    xent = chunked_xent(x, w, safe_labels, mask)
+    loss = xent + aux_weight * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill_step(params, batch, cfg: ArchConfig, *, dtype=jnp.bfloat16):
+    """Full forward, returning last-position logits + cache for decode."""
+    if cfg.family == "audio_encdec":
+        enc_out = _encode(params, batch["frames"].astype(dtype), cfg, "none")
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens, dtype)
+        x = x + _sinusoidal(jnp.arange(x.shape[1])[None], cfg.d_model).astype(dtype)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], tokens.shape)
+        caches = []
+        for seg in params["dec_segments"]:
+            x, c = blocks.apply_segment_prefill(seg, x, pos, cfg, ("dec",),
+                                                enc_out=enc_out)
+            caches.append(c)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+    else:
+        if cfg.family == "vlm":
+            tok_emb = embed_tokens(params["embed"], batch["tokens"], dtype)
+            x = jnp.concatenate([batch["patches"].astype(dtype), tok_emb], axis=1)
+        else:
+            x = embed_tokens(params["embed"], batch["tokens"], dtype)
+        s = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (x.shape[0], s))
+        caches = []
+        for (kinds, _), seg in zip(blocks.segments_for(cfg), params["segments"]):
+            x, c = blocks.apply_segment_prefill(seg, x, pos, cfg, kinds)
+            caches.append(c)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+    w = _head_weight(params, cfg)
+    logits = (x[:, -1:] @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, caches
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, *,
+                dtype=jnp.bfloat16):
+    """One token. tokens: [B, 1] int32; pos: scalar int32; cache from
+    init_cache / prefill_step. Returns (logits [B,1,V], new_cache)."""
+    x = embed_tokens(params["embed"], tokens, dtype)
+    if cfg.family == "audio_encdec":
+        x = x + _sinusoidal(jnp.full((1, 1), pos), cfg.d_model).astype(dtype)
+        new_caches = []
+        for seg, c in zip(params["dec_segments"], cache):
+            x, nc = blocks.apply_segment_decode(seg, c, x, pos, cfg, ("dec",))
+            new_caches.append(nc)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+    else:
+        new_caches = []
+        for (kinds, _), seg, c in zip(blocks.segments_for(cfg),
+                                      params["segments"], cache):
+            x, nc = blocks.apply_segment_decode(seg, c, x, pos, cfg, kinds)
+            new_caches.append(nc)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+    w = _head_weight(params, cfg)
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_caches
+
+
+def init_cache(cfg: ArchConfig, batch: int, size: int, dtype=jnp.bfloat16,
+               enc_len: int = 1500):
+    if cfg.family == "audio_encdec":
+        return [blocks.init_segment_cache(cfg, ("dec",), cfg.n_layers, batch,
+                                          size, dtype, enc_len)]
+    return [blocks.init_segment_cache(cfg, kinds, n, batch, size, dtype)
+            for kinds, n in blocks.segments_for(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            n_img = cfg.n_patches
+            return {"patches": sds((b, n_img, cfg.d_model), dtype),
+                    "tokens": sds((b, s - n_img), i32),
+                    "labels": sds((b, s - n_img), i32)}
+        if cfg.family == "audio_encdec":
+            return {"frames": sds((b, s // 2, cfg.d_model), dtype),
+                    "tokens": sds((b, s // 2), i32),
+                    "labels": sds((b, s // 2), i32)}
+        return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            n_img = cfg.n_patches
+            return {"patches": sds((b, n_img, cfg.d_model), dtype),
+                    "tokens": sds((b, s - n_img), i32)}
+        if cfg.family == "audio_encdec":
+            return {"frames": sds((b, s // 2, cfg.d_model), dtype),
+                    "tokens": sds((b, s // 2), i32)}
+        return {"tokens": sds((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, dtype))
+    return {"cache": cache, "tokens": sds((b, 1), i32),
+            "pos": sds((), i32)}

@@ -1,0 +1,138 @@
+"""Mixture-of-Experts: top-k routing with grouped capacity dispatch (GShard-style).
+
+Dispatch shape discipline mirrors the paper's memory lesson: never build the
+full ``[tokens, E, C_global]`` dispatch tensor. Tokens are split into groups of
+``group_size`` and capacity is per-group, so the dispatch tensor is
+``[G, S_g, E, C_g]`` with ``C_g = S_g * top_k / E * capacity_factor`` — total
+bytes scale with ``tokens * S_g * top_k``, independent of E.
+
+Experts live on the ``model`` mesh axis (expert parallelism); GSPMD inserts the
+all-to-alls for the g→e resharding of the dispatch einsums.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, act: str,
+             dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "router": _normal(k1, (d_model, n_experts), s_in, dtype),
+        "wi": _normal(k2, (n_experts, d_model, d_ff), s_in, dtype),
+        "wo": _normal(k4, (n_experts, d_ff, d_model), s_out, dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["wg"] = _normal(k3, (n_experts, d_model, d_ff), s_in, dtype)
+    return p
+
+
+def _expert_ffn(p, x, act: str):
+    """x: [E, G, C, D] -> [E, G, C, D]. Transparently handles int8-quantised
+    expert weights (see quantize_expert_weights below)."""
+    return _expert_ffn_maybe_q(p, x, act)
+
+
+def apply_moe(p, x, *, n_experts: int, top_k: int, act: str,
+              group_size: int = 512, capacity_factor: float = 1.25):
+    """x: [B, S, D] -> [B, S, D], plus aux load-balancing loss."""
+    dt = x.dtype
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    g_size = min(group_size, t)
+    n_groups = t // g_size
+    xt = tokens[: n_groups * g_size].reshape(n_groups, g_size, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt, p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # [g, s, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(g_size * top_k / n_experts * capacity_factor))
+    # positions within each expert's buffer, per group
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)  # [g,s,k,e]
+    # priority: earlier tokens, earlier k-slots first
+    flat = onehot.reshape(n_groups, g_size * top_k, n_experts)
+    pos = jnp.cumsum(flat, axis=1) - flat  # [g, s*k, e]
+    pos = pos.reshape(n_groups, g_size, top_k, n_experts)
+    within_cap = pos < capacity
+    keep = (onehot > 0) & within_cap
+    pos_in_expert = jnp.sum(pos * onehot, axis=-1)  # [g, s, k]
+
+    # dispatch/combine tensors [g, s, e, c]
+    cap_oh = jax.nn.one_hot(pos_in_expert, capacity, dtype=dt)  # [g,s,k,c]
+    keep_f = keep.astype(dt)
+    dispatch = jnp.einsum("gske,gskc->gsec", keep_f * onehot.astype(dt), cap_oh)
+    combine = jnp.einsum("gske,gskc->gsec",
+                         keep_f * onehot.astype(dt) * gate_vals[..., None].astype(dt),
+                         cap_oh)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xt)
+    expert_out = _expert_ffn(p, expert_in, act)
+    yt = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+
+    y = yt.reshape(n_groups * g_size, d)
+    if n_groups * g_size < t:
+        y = jnp.concatenate([y, tokens[n_groups * g_size:]], axis=0)
+    # aux load-balance loss (Switch): mean_e(frac_tokens_e * mean_prob_e) * E
+    frac = jnp.mean(jnp.sum(onehot[:, :, 0], axis=1) / g_size, axis=0)  # top-1 share
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(frac * mean_p) * n_experts
+    return y.reshape(b, s, d), aux
+
+
+def init_shared_experts(key, d_model: int, d_ff: int, n_shared: int, act: str,
+                        dtype=jnp.float32):
+    """DeepSeek shared experts = one dense gated MLP of width n_shared * d_ff."""
+    from repro.models.layers import init_mlp
+    return init_mlp(key, d_model, n_shared * d_ff, act, dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 weight-only experts (decode-time memory optimisation, §Perf cell A.2)
+# ---------------------------------------------------------------------------
+
+def quantize_expert_weights(p):
+    """Per-(expert, out-channel) symmetric int8 quantisation of wi/wg/wo.
+
+    Batch-decode of a large MoE reads essentially every expert every step, so
+    the step is bound by expert-weight HBM bytes; int8 storage halves them
+    vs bf16 (4x vs fp32). Returns params with {name: int8, name_scale: f32}.
+    """
+    out = {k: v for k, v in p.items() if k not in ("wi", "wg", "wo")}
+    for name in ("wi", "wg", "wo"):
+        if name not in p:
+            continue
+        w = p[name]                         # [E, in, out] (or scan-stacked)
+        scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / 127.0
+        q = jnp.clip(jnp.round(w / jnp.maximum(scale, 1e-12)), -127, 127)
+        out[name] = q.astype(jnp.int8)
+        out[name + "_scale"] = scale.astype(jnp.float32)
+    return out
+
+
+def _dequant(p, name, dt):
+    return (p[name].astype(dt)
+            * p[name + "_scale"].astype(dt)) if name + "_scale" in p \
+        else p[name].astype(dt)
+
+
+def _expert_ffn_maybe_q(p, x, act: str):
+    dt = x.dtype
+    h = jnp.einsum("egcd,edf->egcf", x, _dequant(p, "wi", dt))
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", x,
+                                   _dequant(p, "wg", dt))) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", x,
+                                   _dequant(p, "wg", dt))) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("egcf,efd->egcd", h, _dequant(p, "wo", dt))

@@ -1,0 +1,403 @@
+"""Recurrent blocks: mLSTM / sLSTM (xLSTM) and RG-LRU (RecurrentGemma/Griffin).
+
+All recurrences are expressed in parallel-scannable form:
+
+* mLSTM — chunkwise-parallel linear attention with matrix memory and
+  stabilised exponential gating (intra-chunk quadratic + inter-chunk state),
+  O(S·T_c) memory instead of O(S^2).
+* sLSTM — scalar-memory exponential-gate recurrence; gates are computed from
+  the inputs only (the parallelizable approximation noted in DESIGN.md §8),
+  which turns the stabiliser into a max-plus associative scan and the
+  cell/normaliser into linear associative scans.
+* RG-LRU — input-gated diagonal linear recurrence (associative scan), with a
+  causal depthwise temporal conv in front, per Griffin.
+
+Every block exposes a ``*_decode`` single-step form carrying constant-size
+state — this is what makes xlstm-1.3b / recurrentgemma-9b eligible for the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, apply_norm
+
+
+# ---------------------------------------------------------------------------
+# small helpers
+# ---------------------------------------------------------------------------
+
+def _linear_scan(a, b):
+    """h_t = a_t * h_{t-1} + b_t along axis 1 (time). a,b: [B, S, ...]."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _maxplus_scan(f, i):
+    """m_t = max(m_{t-1} + f_t, i_t) along axis 1 (time)."""
+
+    def combine(x, y):
+        f1, m1 = x
+        f2, m2 = y
+        return f1 + f2, jnp.maximum(m1 + f2, m2)
+
+    _, m = jax.lax.associative_scan(combine, (f, i), axis=1)
+    return m
+
+
+def causal_conv1d(p, x):
+    """Depthwise causal conv along time. x: [B, S, W]; p['w']: [K, W]."""
+    k = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i: i + x.shape[1], :] * p["w"][i].astype(x.dtype)
+    return out + p["b"].astype(x.dtype)
+
+
+def conv1d_decode(p, x_new, conv_state):
+    """Single-step causal conv. conv_state: [B, K-1, W] of past inputs."""
+    k = p["w"].shape[0]
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [B,K,W]
+    out = jnp.einsum("bkw,kw->bw", window, p["w"].astype(x_new.dtype))
+    out = out + p["b"].astype(x_new.dtype)
+    new_state = window[:, 1:, :]
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru_block(key, d_model: int, width: int, conv_k: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    sw = width ** -0.5
+    # Lambda init so that a = exp(-c*softplus(L)) lies in (0.9, 0.999)
+    u = jax.random.uniform(ks[5], (width,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C)).astype(dtype)
+    return {
+        "wx": _normal(ks[0], (d_model, width), s, dtype),
+        "wgate": _normal(ks[1], (d_model, width), s, dtype),
+        "conv": {"w": _normal(ks[2], (conv_k, width), 0.5, dtype),
+                 "b": jnp.zeros((width,), dtype)},
+        "wa": _normal(ks[3], (width, width), sw, dtype),
+        "wi": _normal(ks[4], (width, width), sw, dtype),
+        "lambda": lam,
+        "wo": _normal(jax.random.fold_in(key, 7), (width, d_model), sw, dtype),
+    }
+
+
+def _rglru_coeffs(p, u, dt):
+    r = jax.nn.sigmoid(u @ p["wa"].astype(dt))
+    i = jax.nn.sigmoid(u @ p["wi"].astype(dt))
+    log_a = (-_RGLRU_C * jax.nn.softplus(p["lambda"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = beta * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, b
+
+
+def apply_rglru_block(p, x, return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D] (full-sequence, associative scan)."""
+    dt = x.dtype
+    u_pre = x @ p["wx"].astype(dt)
+    gate = jax.nn.gelu(x @ p["wgate"].astype(dt))
+    u = causal_conv1d(p["conv"], u_pre)
+    a, b = _rglru_coeffs(p, u, dt)
+    h = _linear_scan(a, b).astype(dt)
+    out = (h * gate) @ p["wo"].astype(dt)
+    if return_state:
+        k = p["conv"]["w"].shape[0]
+        state = {"h": h[:, -1].astype(jnp.float32),
+                 "conv": u_pre[:, -(k - 1):, :]}
+        return out, state
+    return out
+
+
+def rglru_init_state(batch: int, width: int, conv_k: int, dtype):
+    return {
+        "h": jnp.zeros((batch, width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_k - 1, width), dtype),
+    }
+
+
+def apply_rglru_decode(p, x, state):
+    """x: [B, 1, D]; state: {'h': [B, W] fp32, 'conv': [B, K-1, W]}."""
+    dt = x.dtype
+    u = x[:, 0] @ p["wx"].astype(dt)
+    gate = jax.nn.gelu(x[:, 0] @ p["wgate"].astype(dt))
+    u, conv_state = conv1d_decode(p["conv"], u, state["conv"])
+    a, b = _rglru_coeffs(p, u[:, None], dt)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = (h.astype(dt) * gate) @ p["wo"].astype(dt)
+    return y[:, None], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, d_model: int, width: int, n_heads: int, conv_k: int,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 9)
+    s = d_model ** -0.5
+    sw = width ** -0.5
+    return {
+        "w_up": _normal(ks[0], (d_model, width), s, dtype),
+        "w_gate": _normal(ks[1], (d_model, width), s, dtype),
+        "conv": {"w": _normal(ks[2], (conv_k, width), 0.5, dtype),
+                 "b": jnp.zeros((width,), dtype)},
+        "wq": _normal(ks[3], (width, width), sw, dtype),
+        "wk": _normal(ks[4], (width, width), sw, dtype),
+        "wv": _normal(ks[5], (width, width), sw, dtype),
+        "w_if": _normal(ks[6], (width, 2 * n_heads), sw, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,), dtype),
+                                 3.0 * jnp.ones((n_heads,), dtype)]),
+        "o_norm": {"scale": jnp.ones((width,), dtype)},
+        "w_down": _normal(ks[7], (width, d_model), sw, dtype),
+    }
+
+
+def _mlstm_gates(p, u, n_heads: int):
+    gif = (u @ p["w_if"].astype(u.dtype)).astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    i_t = gif[..., :n_heads]          # log input gate (pre-exp)
+    f_t = jax.nn.log_sigmoid(gif[..., n_heads:])  # log forget gate
+    return i_t, f_t
+
+
+def mlstm_sequence(q, k, v, i_t, f_t, chunk: int = 256,
+                   return_state: bool = False):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: [B, H, S, d]; i_t, f_t: [B, H, S] (log-space gates).
+    Returns h: [B, H, S, d] (and the final (C, n, m) carry if asked).
+    """
+    b, h, s, d = q.shape
+    q = q.astype(jnp.float32) / (d ** 0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        i_t = jnp.pad(i_t, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        f_t = jnp.pad(f_t, ((0, 0), (0, 0), (0, pad)))
+    qc = q.reshape(b, h, n_chunks, chunk, d)
+    kc = k.reshape(b, h, n_chunks, chunk, d)
+    vc = v.reshape(b, h, n_chunks, chunk, d)
+    ic = i_t.reshape(b, h, n_chunks, chunk)
+    fc = f_t.reshape(b, h, n_chunks, chunk)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, idx):
+        C, n, m = carry  # [B,H,d,d], [B,H,d], [B,H]
+        qb, kb, vb = qc[:, :, idx], kc[:, :, idx], vc[:, :, idx]
+        ib, fb = ic[:, :, idx], fc[:, :, idx]
+        bcum = jnp.cumsum(fb, axis=-1)  # inclusive log-forget prefix
+        # intra-chunk log weights D[t, s] = bcum[t] - bcum[s] + i[s]
+        D = bcum[..., :, None] - bcum[..., None, :] + ib[..., None, :]
+        D = jnp.where(causal, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)
+        m_inter = m[..., None] + bcum
+        m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+        w_intra = jnp.exp(D - m_t[..., None])
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb) * w_intra
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vb)
+        den = jnp.sum(scores, axis=-1)
+        c_inter = jnp.exp(m_inter - m_t)
+        num = num + c_inter[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qb, C)
+        den = den + c_inter * jnp.einsum("bhtd,bhd->bht", qb, n)
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        btot = bcum[..., -1]
+        decay = jnp.exp(btot[..., None] - bcum + ib)  # [B,H,T] (unstabilised log)
+        m_new = jnp.maximum(m + btot, jnp.max(btot[..., None] - bcum + ib, axis=-1))
+        scale_old = jnp.exp(m + btot - m_new)
+        w_new = jnp.exp(btot[..., None] - bcum + ib - m_new[..., None])
+        C_new = scale_old[..., None, None] * C + jnp.einsum(
+            "bht,bhtd,bhtv->bhdv", w_new, kb, vb)
+        n_new = scale_old[..., None] * n + jnp.einsum("bht,bhtd->bhd", w_new, kb)
+        del decay
+        return (C_new, n_new, m_new), out
+
+    C0 = jnp.zeros((b, h, d, d), jnp.float32)
+    n0 = jnp.zeros((b, h, d), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    carry, outs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(n_chunks))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, n_chunks * chunk, d)
+    if return_state:
+        C_f, n_f, m_f = carry
+        return out[:, :, :s], {"C": C_f, "n": n_f, "m": m_f}
+    return out[:, :, :s]
+
+
+def mlstm_decode(q, k, v, i_t, f_t, state):
+    """One step. q,k,v: [B,H,d]; i_t,f_t: [B,H]; state {C, n, m}."""
+    C, n, m = state["C"], state["n"], state["m"]
+    d = q.shape[-1]
+    qf = q.astype(jnp.float32) / (d ** 0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    m_new = jnp.maximum(f_t + m, i_t)
+    sc_old = jnp.exp(f_t + m - m_new)
+    sc_new = jnp.exp(i_t - m_new)
+    C = sc_old[..., None, None] * C + sc_new[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n = sc_old[..., None] * n + sc_new[..., None] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def apply_mlstm_block(p, x, n_heads: int, chunk: int = 256,
+                      return_state: bool = False):
+    """Full mLSTM residual-block body. x: [B, S, D] -> [B, S, D]."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    u = x @ p["w_up"].astype(dt)
+    gate = jax.nn.silu(x @ p["w_gate"].astype(dt))
+    u_conv = causal_conv1d(p["conv"], u)
+    uc = jax.nn.silu(u_conv)
+    width = u.shape[-1]
+    hd = width // n_heads
+    q = (uc @ p["wq"].astype(dt)).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (uc @ p["wk"].astype(dt)).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (u @ p["wv"].astype(dt)).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    i_t, f_t = _mlstm_gates(p, uc, n_heads)
+    i_t = i_t.transpose(0, 2, 1)
+    f_t = f_t.transpose(0, 2, 1)
+    res = mlstm_sequence(q, k, v, i_t, f_t, chunk=chunk,
+                         return_state=return_state)
+    h, state = res if return_state else (res, None)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, width).astype(dt)
+    h = apply_norm(p["o_norm"], h, "rmsnorm")
+    out = (h * gate) @ p["w_down"].astype(dt)
+    if return_state:
+        kk = p["conv"]["w"].shape[0]
+        state["conv"] = u[:, -(kk - 1):, :].astype(jnp.float32)
+        return out, state
+    return out
+
+
+def mlstm_init_state(batch: int, width: int, n_heads: int, conv_k: int):
+    hd = width // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, conv_k - 1, width), jnp.float32),
+    }
+
+
+def apply_mlstm_decode(p, x, state, n_heads: int):
+    dt = x.dtype
+    b = x.shape[0]
+    u = x[:, 0] @ p["w_up"].astype(dt)
+    gate = jax.nn.silu(x[:, 0] @ p["w_gate"].astype(dt))
+    uconv, conv_state = conv1d_decode(p["conv"], u.astype(jnp.float32),
+                                      state["conv"])
+    uc = jax.nn.silu(uconv).astype(dt)
+    width = u.shape[-1]
+    hd = width // n_heads
+    q = (uc @ p["wq"].astype(dt)).reshape(b, n_heads, hd)
+    k = (uc @ p["wk"].astype(dt)).reshape(b, n_heads, hd)
+    v = (u @ p["wv"].astype(dt)).reshape(b, n_heads, hd)
+    i_t, f_t = _mlstm_gates(p, uc, n_heads)
+    h, new_inner = mlstm_decode(q, k, v, i_t, f_t, state)
+    h = h.reshape(b, width).astype(dt)
+    h = apply_norm(p["o_norm"], h, "rmsnorm")
+    y = (h * gate) @ p["w_down"].astype(dt)
+    new_inner["conv"] = conv_state
+    return y[:, None], new_inner
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (parallelizable approximation; gates input-driven)
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    return {
+        "wz": _normal(ks[0], (d_model, d_model), s, dtype),
+        "wo_gate": _normal(ks[1], (d_model, d_model), s, dtype),
+        "w_if": _normal(ks[2], (d_model, 2 * n_heads), s, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,), dtype),
+                                 3.0 * jnp.ones((n_heads,), dtype)]),
+        "o_norm": {"scale": jnp.ones((d_model,), dtype)},
+        "w_down": _normal(ks[3], (d_model, d_model), s, dtype),
+    }
+
+
+def _slstm_parts(p, x, n_heads: int):
+    dt = x.dtype
+    z = jnp.tanh(x @ p["wz"].astype(dt)).astype(jnp.float32)
+    o = jax.nn.sigmoid(x @ p["wo_gate"].astype(dt)).astype(jnp.float32)
+    gif = (x @ p["w_if"].astype(dt)).astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    i_t = gif[..., :n_heads]
+    f_t = jax.nn.log_sigmoid(gif[..., n_heads:])
+    return z, o, i_t, f_t
+
+
+def apply_slstm_block(p, x, n_heads: int, return_state: bool = False):
+    """x: [B, S, D] -> [B, S, D]; three associative scans (m, c, n)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    z, o, i_t, f_t = _slstm_parts(p, x, n_heads)
+    m = _maxplus_scan(f_t, i_t)  # [B,S,H]
+    m_prev = jnp.concatenate(
+        [jnp.full((b, 1, n_heads), -1e30, jnp.float32), m[:, :-1]], axis=1)
+    a = jnp.exp(jnp.clip(f_t + m_prev - m, -60.0, 0.0))
+    w_in = jnp.exp(i_t - m)
+    zz = z.reshape(b, s, n_heads, hd)
+    c = _linear_scan(a[..., None], w_in[..., None] * zz)
+    n = _linear_scan(a, w_in)
+    h = c / jnp.maximum(n[..., None], 1e-6)
+    hflat = (o.reshape(b, s, n_heads, hd) * h).reshape(b, s, d).astype(x.dtype)
+    hflat = apply_norm(p["o_norm"], hflat, "rmsnorm")
+    out = hflat @ p["w_down"].astype(x.dtype)
+    if return_state:
+        return out, {"c": c[:, -1], "n": n[:, -1], "m": m[:, -1]}
+    return out
+
+
+def slstm_init_state(batch: int, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def apply_slstm_decode(p, x, state, n_heads: int):
+    b, _, d = x.shape
+    hd = d // n_heads
+    z, o, i_t, f_t = _slstm_parts(p, x[:, 0:1], n_heads)
+    z, o, i_t, f_t = z[:, 0], o[:, 0], i_t[:, 0], f_t[:, 0]
+    m_new = jnp.maximum(f_t + state["m"], i_t)
+    a = jnp.exp(f_t + state["m"] - m_new)
+    w_in = jnp.exp(i_t - m_new)
+    c = a[..., None] * state["c"] + w_in[..., None] * z.reshape(b, n_heads, hd)
+    n = a * state["n"] + w_in
+    h = c / jnp.maximum(n[..., None], 1e-6)
+    h = (o.reshape(b, n_heads, hd) * h).reshape(b, d).astype(x.dtype)
+    h = apply_norm(p["o_norm"], h, "rmsnorm")
+    y = h @ p["w_down"].astype(x.dtype)
+    return y[:, None], {"c": c, "n": n, "m": m_new}

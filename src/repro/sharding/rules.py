@@ -1,0 +1,158 @@
+"""Partitioning rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Scheme (DESIGN.md §5): 2D logical layout on mesh axes (dp, tp) where dp is
+the data/FSDP axis group — ("data",) single-pod, ("pod", "data") multi-pod —
+and tp = "model" carries tensor/expert parallelism.
+
+* dense weights: contraction dim on dp (FSDP; all-gathered per layer inside
+  the scan), output-feature/head dim on tp (Megatron-style TP).
+* MoE expert stacks: expert dim on tp (EP congruent with TP), d_model on dp.
+* embeddings/lm head: vocab on tp, d_model on dp.
+* caches: batch on dp, heads (or the widest feature dim) on tp.
+* scan-stacked segment params carry a leading None for the layer-group dim.
+
+Everything falls back to a divisibility-checked heuristic so reduced/smoke
+configs (tiny dims) simply replicate.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig
+
+
+def axes_for_mesh(multi_pod: bool) -> Tuple[Tuple[str, ...], str]:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return dp, "model"
+
+
+def _fits(dim: int, size: int) -> bool:
+    return dim >= size and dim % size == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _param_spec(path: str, shape, dp, tp, dp_size: int, tp_size: int,
+                scanned: bool):
+    """Spec for one parameter leaf (shape excludes the scan dim)."""
+    dims = list(shape)
+    nd = len(dims)
+    spec = [None] * nd
+
+    def put(d, axis, size):
+        if size <= 1 or axis is None:
+            return False   # axis unused in this layout (e.g. dp_only: tp=1)
+        if 0 <= d < nd and spec[d] is None and _fits(dims[d], size):
+            spec[d] = axis
+            return True
+        return False
+
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf == "tokens" or "embed" in path:          # [V, D]
+        put(0, tp, tp_size)
+        put(1, dp, dp_size)
+    elif "lm_head" in path:                          # [D, V]
+        put(1, tp, tp_size)
+        put(0, dp, dp_size)
+    elif leaf in ("wq", "wk", "wv") and nd == 3:     # [D, H, hd]
+        put(1, tp, tp_size) or put(2, tp, tp_size)
+        put(0, dp, dp_size)
+    elif leaf == "wo" and nd == 3 and "moe" not in path:  # [H, hd, D]
+        put(0, tp, tp_size) or put(1, tp, tp_size)
+        put(2, dp, dp_size)
+    elif "moe" in path and nd == 3:                  # [E, D, F] / [E, F, D]
+        put(0, tp, tp_size)
+        put(1, dp, dp_size) if leaf in ("wi", "wg") else put(2, dp, dp_size)
+    elif leaf == "router":                           # [D, E]
+        put(0, dp, dp_size)
+    elif leaf in ("wq_b", "wk_b", "wv_b") and nd == 3:  # [r, H, x]
+        put(1, tp, tp_size)
+    elif leaf in ("wq_a", "wkv_a", "wk_rope"):       # [D, r]
+        put(0, dp, dp_size)
+    elif leaf in ("wi", "wg", "wx", "wgate", "w_up", "w_gate", "wz",
+                  "wo_gate") and nd == 2:            # [D, F]-like
+        put(1, tp, tp_size)
+        put(0, dp, dp_size)
+    elif leaf in ("wo", "w_down") and nd == 2:       # [F, D]-like
+        put(0, tp, tp_size)
+        put(1, dp, dp_size)
+    elif leaf == "w_if" and nd == 2:                 # [W, 2H]
+        put(0, dp, dp_size)
+    elif leaf in ("wa",) and nd == 2:                # [W, W] recurrent gates
+        put(1, tp, tp_size)
+    elif leaf == "w" and nd == 2 and "conv" in path:  # [K, W]
+        put(1, tp, tp_size)
+    elif nd >= 2:
+        # fallback: tp on last fitting dim, dp on first remaining
+        for d in range(nd - 1, -1, -1):
+            if put(d, tp, tp_size):
+                break
+        for d in range(nd):
+            if spec[d] is None and put(d, dp, dp_size):
+                break
+    if scanned:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def param_specs(params_tree, cfg: ArchConfig, dp, tp, dp_size: int,
+                tp_size: int):
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        scanned = "segments" in ps
+        shape = leaf.shape[1:] if scanned else leaf.shape
+        return _param_spec(ps, shape, dp, tp, dp_size, tp_size, scanned)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def batch_specs(batch_tree, dp, tp, dp_size: int):
+    """Input batches: batch dim on dp when divisible; else replicate."""
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        spec = [None] * len(shape)
+        if _fits(shape[0], dp_size):
+            spec[0] = dp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(cache_tree, dp, tp, dp_size: int, tp_size: int):
+    """Decode caches: [G, B, ...] — B on dp; heads/feature dim on tp."""
+
+    def one(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        # dim 0 is the scanned layer-group stack; dim 1 is batch
+        if nd >= 2 and _fits(shape[1], dp_size) and shape[1] > 1:
+            spec[1] = dp
+        # tp: prefer the head dim (2), then the last dim, then the seq dim
+        if tp_size > 1:
+            for d in ([2, nd - 1, 3] if nd >= 4 else [nd - 1]):
+                if 2 <= d < nd and spec[d] is None and _fits(shape[d], tp_size):
+                    spec[d] = tp
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

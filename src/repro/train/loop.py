@@ -1,0 +1,109 @@
+"""Training loop: grad accumulation, checkpoint/restart, failure retry.
+
+Fault-tolerance posture (DESIGN.md §5):
+* checkpoints are atomic + committed, written every ``ckpt_every`` steps;
+* the data pipeline is stateless (batch = f(seed, step)), so resume is exact
+  and any replacement host can recompute any microbatch (straggler story);
+* ``run_with_retries`` restarts the loop from the last commit on exceptions —
+  the single-process analogue of a scheduler rescheduling a failed worker;
+* ``reshard`` in checkpoint.py supports elastic restore onto a new mesh.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, TrainConfig
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train.optim import adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, dtype=jnp.float32,
+                    accum: int = 1):
+    """Returns jitted (params, opt, batch) -> (params, opt, metrics).
+
+    ``accum > 1`` splits the batch into microbatches and averages grads —
+    the memory/throughput knob for large global batches.
+    """
+
+    def loss_of(p, b):
+        loss, metrics = lm.loss_fn(p, b, cfg, dtype=dtype,
+                                   remat_policy=tcfg.remat_policy)
+        return loss, metrics
+
+    def step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            def micro(i, carry):
+                g_acc, l_acc = carry
+                mb = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, i * (a.shape[0] // accum), a.shape[0] // accum), batch)
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                return (jax.tree_util.tree_map(jnp.add, g_acc, g), l_acc + l)
+
+            zero = jax.tree_util.tree_map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(0, accum, micro,
+                                            (zero, jnp.float32(0.0)))
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        params, opt_state, om = adamw_update(grads, opt_state, params, tcfg)
+        om["loss"] = loss
+        return params, opt_state, om
+
+    return jax.jit(step, donate_argnums=(0, 1))
+
+
+def train(cfg: ArchConfig, tcfg: TrainConfig, data_fn: Callable[[int], Dict],
+          *, steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+          accum: int = 1, log_every: int = 10, dtype=jnp.float32,
+          params=None, log_fn=print):
+    """Run (or resume) training. Returns (params, opt_state, history)."""
+    if params is None:
+        params = lm.init_params(jax.random.PRNGKey(tcfg.seed), cfg)
+    opt_state = init_opt_state(params)
+    start = 0
+    if ckpt_dir is not None and ckpt.latest_step(ckpt_dir) is not None:
+        (params, opt_state), start = ckpt.restore(ckpt_dir,
+                                                  (params, opt_state))
+        log_fn(f"[resume] restored step {start} from {ckpt_dir}")
+    step_fn = make_train_step(cfg, tcfg, dtype=dtype, accum=accum)
+    history = []
+    t0 = time.time()
+    for i in range(start, steps):
+        batch = {k: jnp.asarray(v) for k, v in data_fn(i).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if (i + 1) % log_every == 0 or i == steps - 1:
+            loss = float(m["loss"])
+            history.append({"step": i + 1, "loss": loss,
+                            "grad_norm": float(m["grad_norm"]),
+                            "lr": float(m["lr"]),
+                            "elapsed_s": round(time.time() - t0, 1)})
+            log_fn(f"step {i+1:5d} loss {loss:.4f} "
+                   f"gnorm {float(m['grad_norm']):.3f}")
+        if ckpt_dir is not None and (i + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, i + 1, (params, opt_state))
+    if ckpt_dir is not None:
+        ckpt.save(ckpt_dir, steps, (params, opt_state))
+    return params, opt_state, history
+
+
+def run_with_retries(fn, max_retries: int = 3, log_fn=print):
+    """Restart-on-failure wrapper: the last committed checkpoint is the
+    recovery point; transient node failures become retries."""
+    for attempt in range(max_retries + 1):
+        try:
+            return fn()
+        except (RuntimeError, OSError) as e:  # pragma: no cover
+            if attempt == max_retries:
+                raise
+            log_fn(f"[retry {attempt + 1}/{max_retries}] {type(e).__name__}:"
+                   f" {e}; resuming from last checkpoint")

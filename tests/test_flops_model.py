@@ -1,0 +1,128 @@
+"""Validate the analytic cost model against XLA HLO flops on probes whose
+scans are fully materialised (no While undercounting): small config, naive
+attention path, single-chunk loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import flops as fl
+from repro.config import ArchConfig, ShapeConfig
+
+
+def _mini_dense():
+    return ArchConfig(name="mini", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_head=16, d_ff=192,
+                      vocab=512, norm="rmsnorm", act="swiglu")
+
+
+def test_fwd_flops_match_hlo_dense():
+    cfg = _mini_dense()
+    b, s = 2, 128
+    shape = ShapeConfig("probe", s, b, "prefill")
+
+    from repro.models import lm
+
+    params = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
+
+    def fwd(p, tokens):
+        # forward only, naive-path sizes (no scan over q blocks at s=128)
+        x = jnp.take(p["embed"]["tokens"], tokens, axis=0)
+        from repro.models import blocks
+        from repro.models.layers import apply_norm
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        for (kinds, _), seg in zip(blocks.segments_for(cfg), p["segments"]):
+            x, _ = blocks.apply_segment(seg, x, pos, cfg, kinds,
+                                        remat_policy="none")
+        x = apply_norm(p["final_norm"], x, cfg.norm)
+        return (x @ p["embed"]["tokens"].T if cfg.tie_embeddings
+                else x @ p["lm_head"]["w"])
+
+    toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    compiled = jax.jit(fwd).lower(params, toks).compile()
+    hlo_flops = compiled.cost_analysis()["flops"]
+    # correct for the layer scan (body counted once, trip count = n_layers)
+    # by computing analytic per-layer + outside terms
+    cost = fl.cell_cost(cfg, shape, chips=1, dp_size=1, tp_size=1)
+    # cost.fwd_flops counts all layers; HLO counts 1 of 2 layer bodies
+    per_layer = (cost.fwd_flops - 2 * b * s * cfg.d_model * cfg.vocab) / 2
+    expected_hlo = per_layer + 2 * b * s * cfg.d_model * cfg.vocab
+    assert hlo_flops == pytest.approx(expected_hlo, rel=0.15), (
+        hlo_flops, expected_hlo)
+
+
+def test_param_count_smollm_is_135m():
+    from repro.configs import get_arch
+    n = fl.param_count(get_arch("smollm-135m"))
+    assert 120e6 < n < 150e6, n
+
+
+def test_param_count_dbrx_is_132b():
+    from repro.configs import get_arch
+    n = fl.param_count(get_arch("dbrx-132b"))
+    assert 120e9 < n < 145e9, n
+
+
+def test_param_count_deepseek_is_236b():
+    from repro.configs import get_arch
+    n = fl.param_count(get_arch("deepseek-v2-236b"))
+    assert 215e9 < n < 255e9, n
+
+
+def test_active_params_deepseek_about_21b():
+    from repro.configs import get_arch
+    n = fl.active_param_count(get_arch("deepseek-v2-236b"))
+    assert 15e9 < n < 30e9, n
+
+
+def test_mla_absorb_cuts_decode_flops():
+    from repro.configs import get_arch
+    from repro.config import SHAPES_BY_NAME
+    cfg = get_arch("deepseek-v2-236b")
+    shape = SHAPES_BY_NAME["decode_32k"]
+    base = fl.cell_cost(cfg, shape, chips=256, dp_size=16, tp_size=16)
+    opt = fl.cell_cost(cfg, shape, chips=256, dp_size=16, tp_size=16,
+                       mla_absorb=True)
+    assert opt.total_flops < base.total_flops / 20
+
+
+def test_packed_attention_halves_attn_term():
+    from repro.configs import get_arch
+    from repro.config import SHAPES_BY_NAME
+    cfg = get_arch("smollm-135m")
+    shape = SHAPES_BY_NAME["train_4k"]
+    base = fl.cell_cost(cfg, shape, chips=256, dp_size=16, tp_size=16)
+    opt = fl.cell_cost(cfg, shape, chips=256, dp_size=16, tp_size=16,
+                       attn_packed=True)
+    assert opt.total_flops < base.total_flops
+    # smollm at 4k is ~half attention; packed factor at S=4096/block=1024 is
+    # 0.625 -> expect >= 15% total reduction
+    assert opt.total_flops < 0.85 * base.total_flops
+
+
+def test_roofline_terms_positive_and_dominant_sane():
+    from repro.configs import get_arch
+    from repro.config import SHAPES_BY_NAME
+    cfg = get_arch("granite-3-8b")
+    for shape_name, expect_dom in [("train_4k", "compute"),
+                                   ("decode_32k", "memory")]:
+        cost = fl.cell_cost(cfg, SHAPES_BY_NAME[shape_name], chips=256,
+                            dp_size=16, tp_size=16)
+        r = fl.roofline(cost, 256)
+        assert r["dominant"] == expect_dom
+        assert 0 < r["mfu_bound"] <= 1.0
+
+
+def test_forest_rs_halves_collectives():
+    from repro.config import ForestConfig
+    base = fl.forest_cost(n_rows=122880, p=533,
+                          fcfg=ForestConfig(n_trees=2, duplicate_k=20,
+                                            max_depth=7, n_bins=64),
+                          chips=256, data_shards=16)
+    rs = fl.forest_cost(n_rows=122880, p=533,
+                        fcfg=ForestConfig(n_trees=2, duplicate_k=20,
+                                          max_depth=7, n_bins=64,
+                                          split_reduce="reduce_scatter"),
+                        chips=256, data_shards=16)
+    assert rs.coll_bytes < 0.55 * base.coll_bytes

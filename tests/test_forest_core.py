@@ -1,0 +1,226 @@
+"""Unit tests for the JAX GBDT substrate + ForestFlow/ForestDiffusion core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ForestConfig
+from repro.core.forest_flow import ForestGenerativeModel, weighted_edges
+from repro.core import interpolants as itp
+from repro.forest.binning import edges_with_sentinel, fit_bins, transform
+from repro.forest.boosting import fit_boosted, fit_ensemble
+from repro.forest.hist import build_histogram
+from repro.forest.split import best_splits
+from repro.forest.tree import grow_tree, predict_tree_codes, predict_tree_values
+
+
+def _edges_codes(x, n_bins):
+    e = fit_bins(jnp.asarray(x), n_bins)
+    return e, transform(jnp.asarray(x), e)
+
+
+def test_binning_roundtrip_semantics():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 3)).astype(np.float32)
+    edges, codes = _edges_codes(x, 16)
+    codes = np.asarray(codes)
+    assert codes.min() >= 0 and codes.max() <= 15
+    # code > b  <=>  x > edges[b]
+    e = np.asarray(edges)
+    for b in range(15):
+        np.testing.assert_array_equal(codes[:, 0] > b, x[:, 0] > e[0, b])
+
+
+def test_histogram_totals_match():
+    rng = np.random.default_rng(1)
+    n, p, out, n_bins, n_nodes = 300, 4, 2, 8, 4
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, p)))
+    node_id = jnp.asarray(rng.integers(0, n_nodes, (n,)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=(n, out)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 1.0, n).astype(np.float32))
+    sums, cnt = build_histogram(codes, node_id, g, w, n_nodes, n_bins)
+    np.testing.assert_allclose(np.asarray(jnp.sum(sums, axis=(0, 2))),
+                               np.asarray((g * w[:, None]).sum(0))[None].repeat(p, 0),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.sum(cnt, axis=(0, 2))),
+                               np.full((p,), float(np.asarray(w).sum())),
+                               rtol=1e-5)
+
+
+def test_single_tree_learns_step_function():
+    """Depth-1 tree on y = 1[x > 0] must split near 0 and hit both leaves."""
+    rng = np.random.default_rng(2)
+    x = rng.uniform(-1, 1, size=(2000, 1)).astype(np.float32)
+    y = (x > 0).astype(np.float32)
+    edges, codes = _edges_codes(x, 32)
+    g = (jnp.zeros_like(jnp.asarray(y)) - jnp.asarray(y))  # g = pred - y
+    w = jnp.ones((2000,), jnp.float32)
+    tree, node_id = grow_tree(codes, g, w, edges_with_sentinel(edges),
+                              depth=1, n_bins=32, reg_lambda=0.0,
+                              min_child_weight=1.0, learning_rate=1.0)
+    pred = np.asarray(predict_tree_values(jnp.asarray(x), tree.feat,
+                                          tree.thr_val, tree.leaf, 1))
+    # leaf values approx 0 and 1 on each side
+    assert abs(pred[x[:, 0] > 0.05].mean() - 1.0) < 0.05
+    assert abs(pred[x[:, 0] < -0.05].mean()) < 0.05
+    assert abs(float(tree.thr_val[0])) < 0.1  # split close to 0
+
+
+def test_codes_vs_values_prediction_agree():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(400, 6)).astype(np.float32)
+    y = np.sin(x[:, 0]) + x[:, 1] ** 2
+    edges, codes = _edges_codes(x, 16)
+    g = -jnp.asarray(y[:, None].astype(np.float32))
+    w = jnp.ones((400,), jnp.float32)
+    tree, _ = grow_tree(codes, g, w, edges_with_sentinel(edges), depth=4,
+                        n_bins=16, reg_lambda=1.0, min_child_weight=1.0,
+                        learning_rate=0.5)
+    by_codes = np.asarray(predict_tree_codes(codes, tree, 4))
+    by_vals = np.asarray(predict_tree_values(jnp.asarray(x), tree.feat,
+                                             tree.thr_val, tree.leaf, 4))
+    np.testing.assert_allclose(by_codes, by_vals, rtol=1e-6)
+
+
+def test_boosting_fits_regression_target():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(1000, 4)).astype(np.float32)
+    y = (np.sin(2 * x[:, 0]) + 0.5 * x[:, 1]).astype(np.float32)[:, None]
+    edges, codes = _edges_codes(x, 32)
+    w = jnp.ones((1000,), jnp.float32)
+    fcfg = ForestConfig(n_trees=40, max_depth=4, learning_rate=0.3,
+                        n_bins=32, reg_lambda=1.0)
+    res = fit_boosted(codes, jnp.asarray(y), w, edges_with_sentinel(edges),
+                      codes, jnp.asarray(y), w, fcfg)
+    # training-as-validation loss should drop far below the variance of y
+    final = float(res.val_curve[int(res.rounds_run) - 1])
+    assert final < 0.05 * float(np.var(y))
+
+
+def test_early_stopping_masks_trees_and_stops():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(400, 3)).astype(np.float32)
+    y = x[:, :1].astype(np.float32)
+    noise = rng.normal(size=(400, 1)).astype(np.float32)
+    edges, codes = _edges_codes(x, 16)
+    w = jnp.ones((400,), jnp.float32)
+    fcfg = ForestConfig(n_trees=60, max_depth=3, learning_rate=0.3, n_bins=16,
+                        early_stop_rounds=5, reg_lambda=1.0)
+    # validation target is pure noise -> must stop early
+    res = fit_boosted(codes, jnp.asarray(y), w, edges_with_sentinel(edges),
+                      codes, jnp.asarray(noise), w, fcfg)
+    assert int(res.rounds_run) < 60
+    assert int(res.best_round) <= int(res.rounds_run)
+    leaves_after = np.asarray(res.leaf)[int(res.best_round) + 1:]
+    assert np.all(leaves_after == 0.0)
+
+
+def test_so_vs_mo_shapes_and_single_output_equivalence():
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(300, 3)).astype(np.float32)
+    y = np.stack([x[:, 0], x[:, 1] * 2], 1).astype(np.float32)
+    edges, codes = _edges_codes(x, 16)
+    w = jnp.ones((300,), jnp.float32)
+    so = ForestConfig(n_trees=10, max_depth=3, n_bins=16, multi_output=False,
+                      reg_lambda=1.0)
+    mo = ForestConfig(n_trees=10, max_depth=3, n_bins=16, multi_output=True,
+                      reg_lambda=1.0)
+    r_so = fit_ensemble(codes, jnp.asarray(y), w, edges_with_sentinel(edges),
+                        codes, jnp.asarray(y), w, so)
+    r_mo = fit_ensemble(codes, jnp.asarray(y), w, edges_with_sentinel(edges),
+                        codes, jnp.asarray(y), w, mo)
+    assert r_so.feat.shape == (2, 10, 7)
+    assert r_so.leaf.shape == (2, 10, 8, 1)
+    assert r_mo.feat.shape == (1, 10, 7)
+    assert r_mo.leaf.shape == (1, 10, 8, 2)
+    # with a single output, SO and MO coincide exactly
+    y1 = y[:, :1]
+    r1 = fit_ensemble(codes, jnp.asarray(y1), w, edges_with_sentinel(edges),
+                      codes, jnp.asarray(y1), w, so)
+    r2 = fit_ensemble(codes, jnp.asarray(y1), w, edges_with_sentinel(edges),
+                      codes, jnp.asarray(y1), w, mo)
+    np.testing.assert_allclose(np.asarray(r1.leaf[0]), np.asarray(r2.leaf[0]),
+                               rtol=1e-5)
+
+
+def test_weighted_edges_ignore_padded_rows():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(200, 2)).astype(np.float32)
+    x_pad = np.concatenate([x, np.full((100, 2), 1e6, np.float32)])
+    w = np.concatenate([np.ones(200), np.zeros(100)]).astype(np.float32)
+    e_ref = np.asarray(fit_bins(jnp.asarray(x), 8))
+    e_pad = np.asarray(weighted_edges(jnp.asarray(x_pad), jnp.asarray(w), 8))
+    np.testing.assert_allclose(e_pad, e_ref, atol=0.15)
+
+
+@pytest.mark.parametrize("method", ["flow", "diffusion"])
+def test_end_to_end_recovers_gaussian_mixture(method):
+    """The paper's core claim in miniature: the forest generative model learns
+    a 2-class, 3-feature distribution well enough to match per-class moments."""
+    rng = np.random.default_rng(8)
+    n_per = 300
+    mu0, mu1 = np.array([-2.0, 0.0, 1.0]), np.array([2.0, 1.0, -1.0])
+    X = np.concatenate([
+        mu0 + 0.5 * rng.normal(size=(n_per, 3)),
+        mu1 + 0.5 * rng.normal(size=(n_per, 3)),
+    ]).astype(np.float32)
+    y = np.concatenate([np.zeros(n_per), np.ones(n_per)]).astype(np.int64)
+    fcfg = ForestConfig(method=method, n_t=12, duplicate_k=20, n_trees=25,
+                        max_depth=4, learning_rate=0.3, n_bins=32,
+                        reg_lambda=1.0)
+    model = ForestGenerativeModel(fcfg).fit(X, y, seed=0)
+    Xg, yg = model.generate(600, seed=1)
+    assert Xg.shape == (600, 3)
+    for cls, mu in [(0, mu0), (1, mu1)]:
+        sel = yg == cls
+        assert sel.sum() > 200  # label sampler keeps the 50/50 split
+        got = Xg[sel].mean(axis=0)
+        np.testing.assert_allclose(got, mu, atol=0.5)
+        assert np.all(Xg[sel].std(axis=0) < 1.2)
+
+
+def test_checkpoint_resume(tmp_path):
+    rng = np.random.default_rng(9)
+    X = rng.normal(size=(120, 3)).astype(np.float32)
+    fcfg = ForestConfig(n_t=4, duplicate_k=5, n_trees=5, max_depth=3,
+                        n_bins=16, reg_lambda=1.0)
+    m1 = ForestGenerativeModel(fcfg).fit(
+        X, seed=0, checkpoint_dir=str(tmp_path), ensembles_per_batch=2)
+    # resume must reload identical forests without retraining
+    m2 = ForestGenerativeModel(fcfg).fit(
+        X, seed=123, checkpoint_dir=str(tmp_path), resume=True,
+        ensembles_per_batch=2)
+    np.testing.assert_array_equal(m1.forests["leaf"], m2.forests["leaf"])
+
+
+def test_vp_interpolant_matches_eq2():
+    # x_t ~ N(sqrt(1-sigma^2) x0, sigma^2) with alpha = sqrt(1 - sigma^2)
+    t = jnp.float32(0.5)
+    a, s = itp.vp_alpha_sigma(t)
+    np.testing.assert_allclose(float(a ** 2 + s ** 2), 1.0, rtol=1e-5)
+    x0 = jnp.ones((4, 2))
+    x1 = jnp.zeros((4, 2))
+    xt, tgt = itp.make_xt_target("diffusion", x0, x1, t)
+    np.testing.assert_allclose(np.asarray(xt), float(a) * np.ones((4, 2)),
+                               rtol=1e-5)
+
+
+def test_imputation_fills_consistent_values():
+    """Impute a masked feature on correlated data: x1 ~= 2*x0; the imputed
+    x1 must track the observed x0 (joint structure, not the marginal)."""
+    rng = np.random.default_rng(11)
+    n = 400
+    x0c = rng.normal(size=(n, 1)).astype(np.float32)
+    X = np.concatenate([x0c, 2 * x0c + 0.1 * rng.normal(size=(n, 1)).astype(np.float32)], 1)
+    fcfg = ForestConfig(method="flow", n_t=12, duplicate_k=20, n_trees=30,
+                        max_depth=4, n_bins=32, reg_lambda=1.0)
+    model = ForestGenerativeModel(fcfg).fit(X, seed=0)
+    Xm = X[:50].copy()
+    Xm[:, 1] = np.nan
+    filled = model.impute(Xm, seed=3, refine_rounds=5)
+    assert not np.isnan(filled).any()
+    # observed column untouched
+    np.testing.assert_array_equal(filled[:, 0], X[:50, 0])
+    # imputed column correlates strongly with 2*x0
+    corr = np.corrcoef(filled[:, 1], 2 * X[:50, 0])[0, 1]
+    assert corr > 0.8, corr

@@ -1,0 +1,68 @@
+"""Distributed forest training: shard_map + psum histograms on 8 virtual
+devices. Runs in a subprocess because XLA_FLAGS must be set before jax init."""
+import json
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.config import ForestConfig
+from repro.forest.distributed import make_distributed_fit
+from repro.forest.packed import PackedForest, predict_forest
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+rng = np.random.default_rng(0)
+n, p = 512, 4
+mu = np.array([1.0, -1.0, 0.5, 0.0], np.float32)
+X = (mu + 0.4 * rng.normal(size=(n, p))).astype(np.float32)
+# scale to [-1, 1] like the host trainer does
+mn, mx = X.min(0), X.max(0)
+Xs = (X - mn) / (mx - mn) * 2 - 1
+
+fcfg = ForestConfig(n_t=4, duplicate_k=8, n_trees=10, max_depth=3, n_bins=16,
+                    reg_lambda=1.0)
+fit = make_distributed_fit(mesh, fcfg, data_axes=("data",))
+
+n_ens = 4  # = n_t, single class, sharded over model axis (2)
+ts = jnp.linspace(0.0, 1.0, n_ens)
+ys = jnp.zeros((n_ens,), jnp.int32)
+keys = jax.random.split(jax.random.PRNGKey(0), n_ens * 2)
+keys = jnp.asarray(np.asarray(keys, np.uint32).reshape(n_ens, 2, 2))
+
+res = fit(jnp.asarray(Xs), jnp.ones((n,), jnp.float32),
+          jnp.zeros((n,), jnp.int32), ts, ys, keys)
+feat = np.asarray(res.feat)      # [n_ens, n_sub, T, H]
+leaf = np.asarray(res.leaf)
+assert feat.shape == (n_ens, p, 10, 7), feat.shape
+assert np.all(np.isfinite(leaf))
+
+# the t=0 ensemble regresses x1 - x0 given x_t = x0: its prediction at the
+# data mean should be close to E[x1 - x0 | x0 = mean] = -mean (x1 is N(0,I))
+f0 = PackedForest(jnp.asarray(res.feat[0]), jnp.asarray(res.thr_val[0]),
+                  jnp.asarray(res.leaf[0]), False)
+x_query = jnp.asarray(Xs.mean(0, keepdims=True))
+v = np.asarray(predict_forest(x_query, f0, 3))[0]
+target = -np.asarray(Xs.mean(0))
+err = np.abs(v - target).max()
+assert err < 0.35, (v, target)
+print(json.dumps({"ok": True, "err": float(err)}))
+"""
+
+
+def test_distributed_fit_8dev():
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["ok"]

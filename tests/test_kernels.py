@@ -1,0 +1,140 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.fa_kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hist.hist_kernel import histogram_pallas
+from repro.kernels.hist.ref import histogram_ref
+from repro.kernels.tree_predict.ref import forest_predict_ref
+from repro.kernels.tree_predict.tree_kernel import forest_predict_pallas
+
+
+# ---------------------------------------------------------------------------
+# histogram kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,out,n_nodes,n_bins,rows_block", [
+    (256, 3, 1, 1, 8, 128),
+    (512, 7, 2, 4, 16, 256),
+    (1024, 5, 4, 8, 32, 512),
+    (384, 2, 3, 2, 64, 128),
+])
+def test_hist_kernel_matches_ref(n, p, out, n_nodes, n_bins, rows_block):
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, p)), jnp.int32)
+    nid = jnp.asarray(rng.integers(0, n_nodes, (n,)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=(n, out)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.0, 1.0, n).astype(np.float32))
+    s_ref, c_ref = histogram_ref(codes, nid, g, w, n_nodes, n_bins)
+    s_pl, c_pl = histogram_pallas(codes, nid, g, w, n_nodes, n_bins,
+                                  rows_block=rows_block, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c_pl), np.asarray(c_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(0, 10 ** 6))
+def test_hist_kernel_property(n_nodes_pow, out, seed):
+    """Property: kernel == oracle for random node/bin assignments."""
+    rng = np.random.default_rng(seed)
+    n, p, n_bins = 128, 3, 8
+    n_nodes = 2 ** n_nodes_pow
+    codes = jnp.asarray(rng.integers(0, n_bins, (n, p)), jnp.int32)
+    nid = jnp.asarray(rng.integers(0, n_nodes, (n,)), jnp.int32)
+    g = jnp.asarray(rng.normal(size=(n, out)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.0, 1.0, n).astype(np.float32))
+    s_ref, c_ref = histogram_ref(codes, nid, g, w, n_nodes, n_bins)
+    s_pl, c_pl = histogram_pallas(codes, nid, g, w, n_nodes, n_bins,
+                                  rows_block=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tree predict kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,depth,n_trees,out,rows_block", [
+    (128, 4, 3, 5, 1, 64),
+    (256, 8, 4, 10, 3, 128),
+    (512, 16, 7, 4, 2, 256),
+])
+def test_tree_predict_matches_ref(n, p, depth, n_trees, out, rows_block):
+    rng = np.random.default_rng(1)
+    h, l = 2 ** depth - 1, 2 ** depth
+    x = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+    feat = jnp.asarray(rng.integers(0, p, (n_trees, h)), jnp.int32)
+    thr = jnp.asarray(rng.normal(size=(n_trees, h)).astype(np.float32))
+    leaf = jnp.asarray(rng.normal(size=(n_trees, l, out)).astype(np.float32))
+    ref = forest_predict_ref(x, feat, thr, leaf, depth)
+    got = forest_predict_pallas(x, feat, thr, leaf, depth,
+                                rows_block=rows_block, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tree_predict_matches_trained_forest():
+    """The kernel must agree with predictions of an actually-trained forest."""
+    from repro.config import ForestConfig
+    from repro.forest.binning import edges_with_sentinel, fit_bins, transform
+    from repro.forest.boosting import fit_boosted
+
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(512, 5)).astype(np.float32)
+    y = (np.sin(x[:, 0]) + x[:, 1]).astype(np.float32)[:, None]
+    edges = fit_bins(jnp.asarray(x), 16)
+    codes = transform(jnp.asarray(x), edges)
+    fcfg = ForestConfig(n_trees=8, max_depth=4, n_bins=16, reg_lambda=1.0)
+    res = fit_boosted(codes, jnp.asarray(y), jnp.ones((512,), jnp.float32),
+                      edges_with_sentinel(edges), codes, jnp.asarray(y),
+                      jnp.ones((512,), jnp.float32), fcfg)
+    ref = forest_predict_ref(jnp.asarray(x), res.feat, res.thr_val, res.leaf, 4)
+    got = forest_predict_pallas(jnp.asarray(x), res.feat, res.thr_val,
+                                res.leaf, 4, rows_block=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,dtype", [
+    (1, 2, 2, 128, 128, 32, True, jnp.float32),
+    (2, 4, 2, 256, 256, 64, True, jnp.float32),
+    (1, 8, 1, 128, 256, 64, False, jnp.float32),
+    (2, 4, 4, 128, 128, 64, True, jnp.bfloat16),
+    (1, 6, 3, 192, 192, 32, True, jnp.float32),
+])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, skv, d, causal, dtype):
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    ref = attention_ref(q, k, v, causal)
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=64, bk=64,
+                                 interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_matches_mea():
+    """The model-side blocked attention and the kernel agree too."""
+    from repro.models.attention import mea_attention
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 32)).astype(np.float32))
+    a = mea_attention(q, k, v, causal=True, q_block=64, kv_block=64)
+    b_ = flash_attention_pallas(q, k, v, causal=True, bq=64, bk=64,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-4,
+                               atol=2e-4)
