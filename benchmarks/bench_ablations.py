@@ -11,7 +11,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.config import ForestConfig
-from repro.core.forest_flow import ForestGenerativeModel
+from repro.tabgen import TabularGenerator
 from repro.data.tabular import two_moons
 from repro.eval import metrics as M
 
@@ -21,8 +21,8 @@ def fig3_early_stopping_profile(quick: bool = True) -> None:
     X, y = two_moons(400, seed=0)
     fcfg = ForestConfig(n_t=8, duplicate_k=10, n_trees=40, max_depth=4,
                         n_bins=32, reg_lambda=1.0, early_stop_rounds=5)
-    model = ForestGenerativeModel(fcfg).fit(X, y, seed=0)
-    prof = model.trees_at_best_iteration()
+    model = TabularGenerator(fcfg).fit(X, y, seed=0)
+    prof = model.artifacts.trees_at_best_iteration()
     emit("ablation/fig3/trees_by_timestep", "-",
          "|".join(f"{v:.1f}" for v in prof))
     # the paper's qualitative claim: late timesteps (near noise) need fewer
@@ -45,7 +45,7 @@ def fig11_k_ntree_ablation(quick: bool = True) -> None:
                                     max_depth=4, n_bins=32, reg_lambda=1.0,
                                     early_stop_rounds=5, multi_output=mo)
                 t0 = time.time()
-                m = ForestGenerativeModel(fcfg).fit(tr, ytr, seed=0)
+                m = TabularGenerator(fcfg).fit(tr, ytr, seed=0)
                 G, _ = m.generate(len(tr), seed=1)
                 w1 = M.sliced_w1(G, te)
                 emit(f"ablation/fig11/{'MO' if mo else 'SO'}/K={K}/T={T}",
@@ -61,7 +61,7 @@ def schedule_ablation(quick: bool = True) -> None:
         fcfg = ForestConfig(n_t=10, duplicate_k=20, n_trees=30, max_depth=4,
                             n_bins=32, reg_lambda=1.0, t_schedule=sched)
         t0 = time.time()
-        m = ForestGenerativeModel(fcfg).fit(tr, y[:400], seed=0)
+        m = TabularGenerator(fcfg).fit(tr, y[:400], seed=0)
         G, _ = m.generate(400, seed=1)
         emit(f"ablation/t_schedule/{sched}",
              f"{(time.time() - t0) * 1e6:.0f}",

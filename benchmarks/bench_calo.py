@@ -15,7 +15,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.config import ForestConfig
-from repro.core.forest_flow import ForestGenerativeModel
+from repro.tabgen import TabularGenerator
 from repro.data import calorimeter as calo
 from repro.eval import metrics as M
 
@@ -32,7 +32,7 @@ def run_dataset(dataset: str, n: int, quick: bool = True):
         learning_rate=0.5 if quick else 1.5, n_bins=32,
         reg_lambda=1.0, multi_output=True)   # MO: CPU-tractable at p>=368
     t0 = time.time()
-    model = ForestGenerativeModel(fcfg).fit(X, y, seed=0)
+    model = TabularGenerator(fcfg).fit(X, y, seed=0)
     fit_s = time.time() - t0
     t0 = time.time()
     G, yg = model.generate(n, seed=2)

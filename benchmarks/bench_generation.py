@@ -1,40 +1,68 @@
-"""Paper Figure 4 (bottom) + App. B.2: generation time, SO vs MO, and the
-Pallas tree-inference kernel vs the XLA reference (interpret mode = CPU
-correctness; the timing signal of interest is SO-vs-MO ensemble count).
+"""Paper Figure 4 (bottom) + App. B.2: generation time, SO vs MO — and the
+PR 1 perf trajectory: the old per-class Python dispatch loop vs the new
+class-vmapped single-program sampler (``repro.tabgen.sample``).
 
-CSV: name,us_per_call,derived (derived = ms per generated datapoint).
+CSV: name,us_per_call,derived (derived = ms per generated datapoint or
+rows/sec). With ``json_path`` set, also writes a ``BENCH_generation.json``
+with rows/sec for loop vs vmapped per configuration.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
 from benchmarks.common import emit
 from repro.config import ForestConfig
-from repro.core.forest_flow import ForestGenerativeModel
 from repro.data.tabular import synthetic_resource_dataset
+from repro.tabgen import fit_artifacts, sample, sample_loop_reference
 
 
-def main(quick: bool = True) -> None:
+def _time(fn, reps: int = 3) -> float:
+    fn()  # warm-up compile
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps
+
+
+def main(quick: bool = True, json_path: str = None) -> None:
     n, n_y = (500, 2) if quick else (2000, 5)
+    records = []
     for p in (4, 16) if quick else (10, 30, 100):
         X, y = synthetic_resource_dataset(n, p, n_y, seed=0)
         for mo in (False, True):
             fcfg = ForestConfig(n_t=6, duplicate_k=5, n_trees=10, max_depth=4,
                                 n_bins=32, reg_lambda=1.0, multi_output=mo)
-            model = ForestGenerativeModel(fcfg).fit(X, y, seed=0)
-            # warm-up compile, then measure steady-state generation
-            model.generate(n, seed=1)
-            t0 = time.time()
-            reps = 3
-            for r in range(reps):
-                model.generate(n, seed=2 + r)
-            dt = (time.time() - t0) / reps
+            art = fit_artifacts(X, y, fcfg, seed=0)
             name = "MO" if mo else "SO"
-            emit(f"generation/{name}/p={p}", f"{dt * 1e6:.0f}",
-                 f"ms_per_point={1000 * dt / n:.4f}")
+
+            dt_loop = _time(lambda: sample_loop_reference(art, n, seed=2))
+            dt_vmap = _time(lambda: sample(art, n, seed=2))
+            emit(f"generation/{name}/p={p}/per_class_loop",
+                 f"{dt_loop * 1e6:.0f}",
+                 f"rows_per_sec={n / dt_loop:.0f}")
+            emit(f"generation/{name}/p={p}/vmapped",
+                 f"{dt_vmap * 1e6:.0f}",
+                 f"rows_per_sec={n / dt_vmap:.0f}|"
+                 f"speedup={dt_loop / dt_vmap:.2f}x")
+            records.append({
+                "config": {"n": n, "p": p, "n_y": n_y, "multi_output": mo,
+                           "n_t": fcfg.n_t, "sampler": "euler"},
+                "per_class_loop_rows_per_sec": n / dt_loop,
+                "vmapped_rows_per_sec": n / dt_vmap,
+                "speedup": dt_loop / dt_vmap,
+            })
+    if json_path:
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump({"bench": "generation", "records": records}, f, indent=1)
+        emit("generation/json", "-", json_path)
 
 
 if __name__ == "__main__":
-    main()
+    main(json_path="BENCH_generation.json")

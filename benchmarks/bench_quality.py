@@ -20,7 +20,7 @@ from benchmarks.common import emit
 from repro.config import ForestConfig
 from repro.core.copula import GaussianCopula
 from repro.core.ctgan import CTGANBaseline
-from repro.core.forest_flow import ForestGenerativeModel
+from repro.tabgen import TabularGenerator
 from repro.core.nn_baselines import NNGenerativeModel, TVAEBaseline
 from repro.data.tabular import correlated_gaussian, two_moons
 from repro.eval import metrics as M
@@ -50,10 +50,10 @@ def _methods(quick: bool):
     fc = dict(n_t=n_t, duplicate_k=K, n_trees=T, max_depth=4, n_bins=32,
               reg_lambda=1.0, early_stop_rounds=5)
     return {
-        "FF-SO": lambda: ForestGenerativeModel(ForestConfig(method="flow", **fc)),
-        "FF-MO": lambda: ForestGenerativeModel(
+        "FF-SO": lambda: TabularGenerator(ForestConfig(method="flow", **fc)),
+        "FF-MO": lambda: TabularGenerator(
             ForestConfig(method="flow", multi_output=True, **fc)),
-        "FD-SO": lambda: ForestGenerativeModel(
+        "FD-SO": lambda: TabularGenerator(
             ForestConfig(method="diffusion", **fc)),
         "copula": lambda: GaussianCopula(),
         "tvae": lambda: TVAEBaseline(steps=steps),

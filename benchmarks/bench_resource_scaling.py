@@ -23,8 +23,8 @@ result = {{}}
 
 
 def variants():
-    ours = ("from repro.core.forest_flow import ForestGenerativeModel",
-            "ForestGenerativeModel")
+    ours = ("from repro.tabgen import TabularGenerator",
+            "TabularGenerator")
     naive = ("from repro.core.naive import NaiveForestGenerativeModel",
              "NaiveForestGenerativeModel")
     return [

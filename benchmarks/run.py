@@ -14,6 +14,7 @@ CPU CI budget.
 from __future__ import annotations
 
 import argparse
+import os
 import traceback
 
 
@@ -23,6 +24,10 @@ def main() -> None:
                     help="comma-separated subset of sections")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized settings (hours on CPU)")
+    ap.add_argument("--json-dir", default=".",
+                    help="where BENCH_*.json artifacts are written (CI can "
+                         "point this at a scratch dir to keep the committed "
+                         "trajectory files untouched)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -35,18 +40,24 @@ def main() -> None:
         "quality": lambda: bench_quality.main(quick=quick),
         "calo": lambda: bench_calo.main(quick=quick,
                                         n=1500 if quick else 120000),
-        "generation": lambda: bench_generation.main(quick=quick),
+        "generation": lambda: bench_generation.main(
+            quick=quick, json_path=os.path.join(args.json_dir,
+                                                "BENCH_generation.json")),
         "ablation": lambda: bench_ablations.main(quick=quick),
         "roofline": lambda: bench_roofline.main(),
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     print("name,us_per_call,derived")
+    failed = []
     for name in chosen:
         try:
             sections[name]()
         except Exception:  # keep the harness going; report the failure
+            failed.append(name)
             print(f"{name},fail,{traceback.format_exc().splitlines()[-1]}",
                   flush=True)
+    if failed:  # after all sections ran, make CI see the failure
+        raise SystemExit(f"benchmark sections failed: {','.join(failed)}")
 
 
 if __name__ == "__main__":

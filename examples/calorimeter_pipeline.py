@@ -13,7 +13,7 @@ import tempfile
 import numpy as np
 
 from repro.config import ForestConfig
-from repro.core.forest_flow import ForestGenerativeModel
+from repro.tabgen import TabularGenerator
 from repro.data import calorimeter as calo
 from repro.eval import metrics as M
 
@@ -44,7 +44,7 @@ def main():
     with tempfile.TemporaryDirectory() as ckpt_dir:
         print("training CaloForest (checkpoints stream to disk;"
               " rerun with resume=True restarts after failure)...")
-        model = ForestGenerativeModel(fcfg).fit(
+        model = TabularGenerator(fcfg).fit(
             X, y, seed=0, checkpoint_dir=ckpt_dir)
         G, _ = model.generate(n, seed=2)
 

@@ -1,35 +1,72 @@
-"""Quickstart: train ForestFlow on two-moons, generate, evaluate.
+"""Quickstart for the composable tabular-generation API:
 
-    PYTHONPATH=src python examples/quickstart.py
+    fit -> save -> load -> generate (registry sampler) -> impute -> evaluate
+
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
+
+``--smoke`` shrinks the config for the CI budget (scripts/ci_smoke.sh).
 """
+import argparse
+import os
+import tempfile
+
 import numpy as np
 
 from repro.config import ForestConfig
-from repro.core.forest_flow import ForestGenerativeModel
 from repro.data.tabular import two_moons
 from repro.eval import metrics as M
+from repro.tabgen import TabularGenerator, list_samplers
 
 
 def main():
-    X, y = two_moons(600, seed=0)
-    tr, te = X[:480], X[480:]
-    ytr = y[:480]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config for CI smoke runs")
+    args = ap.parse_args()
 
-    fcfg = ForestConfig(method="flow", n_t=10, duplicate_k=20, n_trees=40,
+    n = 200 if args.smoke else 600
+    X, y = two_moons(n, seed=0)
+    cut = int(0.8 * n)
+    tr, te = X[:cut], X[cut:]
+    ytr = y[:cut]
+
+    fcfg = ForestConfig(method="flow",
+                        n_t=6 if args.smoke else 10,
+                        duplicate_k=5 if args.smoke else 20,
+                        n_trees=10 if args.smoke else 40,
                         max_depth=4, n_bins=32, reg_lambda=1.0,
                         early_stop_rounds=5)
     print("fitting ForestFlow (SO + early stopping)...")
-    model = ForestGenerativeModel(fcfg).fit(tr, ytr, seed=0)
+    gen = TabularGenerator(fcfg).fit(tr, ytr, seed=0)
     print("trees kept per timestep:",
-          np.round(model.trees_at_best_iteration(), 1))
+          np.round(gen.artifacts.trees_at_best_iteration(), 1))
 
-    G, yg = model.generate(480, seed=1)
-    print(f"generated {G.shape[0]} samples")
+    # save / load round-trip: artifacts are a single .npz + .json pair
+    with tempfile.TemporaryDirectory() as d:
+        base = gen.save(os.path.join(d, "two_moons"))
+        print(f"saved artifacts to {base}.npz / {base}.json")
+        gen = TabularGenerator.load(base)
+
+    G, yg = gen.generate(cut, seed=1)
+    print(f"generated {G.shape[0]} samples "
+          f"(samplers available: {', '.join(list_samplers('flow'))})")
     print(f"  sliced-W1 to train: {M.sliced_w1(G, tr):.4f}")
     print(f"  sliced-W1 to test:  {M.sliced_w1(G, te):.4f}")
     print(f"  coverage of test:   {M.coverage(G, te, k=3):.3f}")
     print(f"  two-sample AUC:     {M.classifier_auc(te, G):.3f} "
           "(0.5 = indistinguishable)")
+
+    # heun: 2nd-order ODE solver from the registry, better at coarse n_t
+    Gh, _ = gen.generate(cut, sampler="heun", seed=1)
+    print(f"  heun sliced-W1:     {M.sliced_w1(Gh, te):.4f}")
+
+    # imputation: clamp observed features, solve for the missing ones
+    Xm = tr[:40].copy()
+    Xm[:, 1] = np.nan
+    filled = gen.impute(Xm, ytr[:40], seed=2,
+                        refine_rounds=2 if args.smoke else 3)
+    err = np.mean(np.abs(filled[:, 1] - tr[:40, 1]))
+    print(f"imputed 40 rows; mean abs error on masked feature: {err:.3f}")
 
 
 if __name__ == "__main__":

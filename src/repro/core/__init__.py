@@ -1,3 +1,5 @@
 # The paper's primary contribution: memory-efficient diffusion / flow-matching
-# generative models whose vector field is a boosted-tree forest.
+# generative models whose vector field is a boosted-tree forest. The
+# composable API lives in repro.tabgen; ForestGenerativeModel is the
+# deprecated monolithic facade.
 from repro.core.forest_flow import ForestGenerativeModel  # noqa: F401

@@ -1,57 +1,35 @@
-"""ForestFlow / ForestDiffusion: the paper's system, re-engineered for JAX.
+"""Deprecation shim: ``ForestGenerativeModel`` over :mod:`repro.tabgen`.
 
-Memory discipline (paper §3.3, re-expressed for accelerators):
+The monolithic trainer/sampler that used to live here was carved into the
+composable ``repro.tabgen`` subsystem:
 
-* Issue 1 — the [n_t, nK, p] array of noised inputs is never built. Each
-  ensemble batch constructs its own x_t inside the jitted fit.
-* Issue 2 — exactly one copy of X0 lives in memory; noise X1 is *never stored
-  at all*: it is regenerated on device from a counter-based PRNG key (a
-  strictly stronger version of the shared-memmap fix).
-* Issue 3 — trained ensembles are streamed to disk per batch
-  (``checkpoint_dir``) and training resumes from the manifest after failure.
-* Issues 5-7 — classes are sorted/padded into dense [n_y, n_max, p] blocks
-  (static-shape slices, no boolean-mask copies), one quantised code matrix is
-  shared by all p outputs of an ensemble (DMatrix reuse), and everything is
-  fp32.
+* training            -> :func:`repro.tabgen.fit_artifacts`
+* trained state       -> :class:`repro.tabgen.ForestArtifacts` (a pytree
+                         with ``save``/``load``)
+* sampling            -> :func:`repro.tabgen.sample` (registry-dispatched,
+                         one jitted class-vmapped program per call)
+* imputation          -> :func:`repro.tabgen.impute`
+* mixed-type frontend -> :class:`repro.tabgen.TabularGenerator`
 
-Algorithmic additions from §3.4: multi-output trees, early stopping on a
-fresh-noise validation set, per-class min-max scalers, empirical label
-sampling.
+This class remains so existing code keeps working; new code should use the
+``tabgen`` API directly.
 """
 from __future__ import annotations
 
-import json
-import os
-from typing import Dict, Optional
+import warnings
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ForestConfig
-from repro.core import interpolants as itp
-from repro.core.generate import diffusion_ddim, diffusion_em, flow_euler
-from repro.forest.binning import edges_with_sentinel, transform
-from repro.forest.boosting import fit_ensemble
-from repro.forest.packed import PackedForest
-
-
-def weighted_edges(x, w, n_bins: int):
-    """Quantile edges over the rows with positive weight (padded rows excluded).
-
-    x: [n, p]; w: [n]. Returns [p, n_bins - 1] fp32.
-    """
-    big = jnp.where(w[:, None] > 0, x, jnp.inf)
-    s = jnp.sort(big, axis=0)
-    n_real = jnp.sum(w > 0).astype(jnp.float32)
-    qs = jnp.arange(1, n_bins, dtype=jnp.float32) / n_bins
-    idx = jnp.clip((qs * (n_real - 1.0)).astype(jnp.int32), 0,
-                   x.shape[0] - 1)
-    return jnp.transpose(s[idx])
+from repro.tabgen.artifacts import ForestArtifacts
+from repro.tabgen.fitting import fit_artifacts, weighted_edges  # noqa: F401
+from repro.tabgen.imputation import impute as _impute
+from repro.tabgen.sampling import sample as _sample
 
 
 class ForestGenerativeModel:
-    """User-facing trainer/sampler for tabular data.
+    """Deprecated facade kept for backward compatibility.
 
     >>> model = ForestGenerativeModel(ForestConfig(n_t=8, duplicate_k=10))
     >>> model.fit(X, y, seed=0)
@@ -59,291 +37,69 @@ class ForestGenerativeModel:
     """
 
     def __init__(self, fcfg: ForestConfig):
+        warnings.warn(
+            "ForestGenerativeModel is deprecated; use repro.tabgen "
+            "(TabularGenerator / fit_artifacts + sample)",
+            DeprecationWarning, stacklevel=2)
         self.fcfg = fcfg
-        self.forests: Optional[Dict[str, np.ndarray]] = None
-        self.val_curves: Optional[np.ndarray] = None
-        self.best_rounds: Optional[np.ndarray] = None
-
-    # ------------------------------------------------------------------
-    # fitting
-    # ------------------------------------------------------------------
-
-    def _prepare(self, X: np.ndarray, y: Optional[np.ndarray]):
-        X = np.asarray(X, np.float32)          # Issue 7: fp32 end-to-end
-        n, p = X.shape
-        if y is None:
-            y = np.zeros((n,), np.int64)
-        order = np.argsort(y, kind="stable")   # Issue 5: sort + slice
-        X, y = X[order], np.asarray(y)[order]
-        classes, counts = np.unique(y, return_counts=True)
-        n_y = len(classes)
-        n_max = int(counts.max())
-        Xc = np.zeros((n_y, n_max, p), np.float32)
-        Wc = np.zeros((n_y, n_max), np.float32)
-        mins = np.zeros((n_y, p), np.float32)
-        maxs = np.ones((n_y, p), np.float32)
-        start = 0
-        for i, c in enumerate(counts):
-            rows = X[start:start + c]
-            mins[i] = rows.min(axis=0)
-            maxs[i] = rows.max(axis=0)
-            scale = np.where(maxs[i] > mins[i], maxs[i] - mins[i], 1.0)
-            rows = (rows - mins[i]) / scale * 2.0 - 1.0  # per-class scaler
-            Xc[i, :c] = rows
-            Xc[i, c:] = rows[0] if c else 0.0
-            Wc[i, :c] = 1.0
-            start += c
-        self._classes = classes
-        self._counts = counts
-        self._mins, self._maxs = mins, maxs
-        self._labels_sorted = y
-        return Xc, Wc
+        self.artifacts: Optional[ForestArtifacts] = None
+        self._forests_host = None
 
     def fit(self, X, y=None, *, seed: int = 0,
             checkpoint_dir: Optional[str] = None, resume: bool = False,
             ensembles_per_batch: int = 0):
-        fcfg = self.fcfg
-        Xc, Wc = self._prepare(X, y)
-        n_y, n_max, p = Xc.shape
-        Xc_d = jnp.asarray(Xc)
-        Wc_d = jnp.asarray(Wc)
-        ts = np.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff,
-                              fcfg.t_schedule))
-        root = jax.random.PRNGKey(seed)
-
-        K = fcfg.duplicate_k
-
-        def fit_one(t, y_idx, eid):
-            """Train the (t, y) ensemble; everything transient lives here."""
-            x0 = Xc_d[y_idx]
-            w = Wc_d[y_idx]
-            x0d = jnp.repeat(x0, K, axis=0)                  # [mK, p]
-            wd = jnp.repeat(w, K, axis=0)
-            k_tr = jax.random.fold_in(root, eid * 2)
-            k_va = jax.random.fold_in(root, eid * 2 + 1)
-            x1 = jax.random.normal(k_tr, x0d.shape, jnp.float32)
-            xt, tgt = itp.make_xt_target(fcfg.method, x0d, x1, t,
-                                         fcfg.sigma, k_tr)
-            edges = weighted_edges(xt, wd, fcfg.n_bins)
-            codes = transform(xt, edges)
-            x1v = jax.random.normal(k_va, x0d.shape, jnp.float32)
-            xtv, tgtv = itp.make_xt_target(fcfg.method, x0d, x1v, t,
-                                           fcfg.sigma, k_va)
-            codes_v = transform(xtv, edges)
-            res = fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
-                               codes_v, tgtv, wd, fcfg)
-            return res
-
-        fit_batch = jax.jit(jax.vmap(fit_one, in_axes=(0, 0, 0)))
-
-        grid = [(ti, yi) for ti in range(fcfg.n_t) for yi in range(n_y)]
-        bs = ensembles_per_batch or max(1, min(len(grid), 8))
-        manifest_path = (os.path.join(checkpoint_dir, "manifest.json")
-                         if checkpoint_dir else None)
-        done = set()
-        if resume and manifest_path and os.path.exists(manifest_path):
-            with open(manifest_path) as f:
-                done = set(tuple(e) for e in json.load(f)["batches"])
-
-        results = {}
-        for b0 in range(0, len(grid), bs):
-            chunk = grid[b0:b0 + bs]
-            key_id = (b0, len(chunk))
-            if key_id in done:
-                data = np.load(os.path.join(checkpoint_dir, f"batch_{b0}.npz"))
-                res_np = {k: data[k] for k in data.files}
-            else:
-                t_arr = jnp.asarray([ts[ti] for ti, _ in chunk], jnp.float32)
-                y_arr = jnp.asarray([yi for _, yi in chunk], jnp.int32)
-                e_arr = jnp.asarray([ti * n_y + yi for ti, yi in chunk],
-                                    jnp.int32)
-                res = fit_batch(t_arr, y_arr, e_arr)
-                res_np = {
-                    "feat": np.asarray(res.feat),
-                    "thr_val": np.asarray(res.thr_val),
-                    "leaf": np.asarray(res.leaf),
-                    "best_round": np.asarray(res.best_round),
-                    "rounds_run": np.asarray(res.rounds_run),
-                    "val_curve": np.asarray(res.val_curve),
-                }
-                if checkpoint_dir:   # Issue 3: stream to disk, checkpointed
-                    os.makedirs(checkpoint_dir, exist_ok=True)
-                    np.savez(os.path.join(checkpoint_dir, f"batch_{b0}.npz"),
-                             **res_np)
-                    done.add(key_id)
-                    with open(manifest_path, "w") as f:
-                        json.dump({"batches": sorted(done)}, f)
-            for j, (ti, yi) in enumerate(chunk):
-                results[(ti, yi)] = {k: v[j] for k, v in res_np.items()}
-
-        # stack into [n_t, n_y, ...]
-        def stack(field):
-            return np.stack([
-                np.stack([results[(ti, yi)][field] for yi in range(n_y)])
-                for ti in range(fcfg.n_t)])
-
-        self.forests = {k: stack(k) for k in
-                        ("feat", "thr_val", "leaf", "best_round", "rounds_run",
-                         "val_curve")}
-        self.n_y = n_y
-        self.p = p
+        self.artifacts = fit_artifacts(
+            X, y, self.fcfg, seed=seed, checkpoint_dir=checkpoint_dir,
+            resume=resume, ensembles_per_batch=ensembles_per_batch)
+        self._forests_host = None
         return self
 
-    # ------------------------------------------------------------------
-    # generation
-    # ------------------------------------------------------------------
-
-    def _sample_labels(self, n: int, rng: np.random.Generator):
-        counts = self._counts
-        if self.fcfg.label_sampler == "multinomial":
-            probs = counts / counts.sum()
-            idx = rng.choice(len(counts), size=n, p=probs)
-        else:  # empirical label distribution (paper C.4)
-            reps = np.floor(n * counts / counts.sum()).astype(int)
-            rem = n - reps.sum()
-            frac = n * counts / counts.sum() - reps
-            extra = np.argsort(-frac)[:rem]
-            reps[extra] += 1
-            idx = np.repeat(np.arange(len(counts)), reps)
-        idx.sort()
-        return idx
-
     def generate(self, n: int, *, seed: int = 0):
-        assert self.forests is not None, "fit() first"
-        fcfg = self.fcfg
-        rng = np.random.default_rng(seed)
-        label_idx = self._sample_labels(n, rng)
-        key = jax.random.PRNGKey(seed + 7)
-        ts = np.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff,
-                                      fcfg.t_schedule))
-        outs, labels = [], []
-        for yi in range(self.n_y):
-            n_c = int((label_idx == yi).sum())
-            if n_c == 0:
-                continue
-            key, k1, k2 = jax.random.split(key, 3)
-            x1 = jax.random.normal(k1, (n_c, self.p), jnp.float32)
-            stacked = PackedForest(
-                jnp.asarray(self.forests["feat"][:, yi]),
-                jnp.asarray(self.forests["thr_val"][:, yi]),
-                jnp.asarray(self.forests["leaf"][:, yi]),
-                fcfg.multi_output)
-            ts_d = jnp.asarray(ts)
-            if fcfg.method == "flow":
-                x0 = flow_euler(x1, stacked, fcfg.max_depth, fcfg.n_t,
-                                ts=ts_d)
-            elif fcfg.diff_sampler == "em":
-                x0 = diffusion_em(x1, stacked, fcfg.max_depth, fcfg.n_t,
-                                  fcfg.eps_diff, k2, ts=ts_d)
-            else:
-                x0 = diffusion_ddim(x1, stacked, fcfg.max_depth, fcfg.n_t,
-                                    fcfg.eps_diff, ts=ts_d)
-            x0 = np.asarray(x0)
-            scale = np.where(self._maxs[yi] > self._mins[yi],
-                             self._maxs[yi] - self._mins[yi], 1.0)
-            x0 = (x0 + 1.0) / 2.0 * scale + self._mins[yi]
-            outs.append(x0)
-            labels.append(np.full((n_c,), self._classes[yi]))
-        X = np.concatenate(outs, axis=0)
-        yv = np.concatenate(labels, axis=0)
-        perm = rng.permutation(len(X))
-        return X[perm], yv[perm]
+        assert self.artifacts is not None, "fit() first"
+        return _sample(self.artifacts, n, seed=seed)
 
-    # ------------------------------------------------------------------
-    # imputation (the companion capability of Jolicoeur-Martineau et al.:
-    # REPAINT-style clamping of observed features along the reverse solve)
-    # ------------------------------------------------------------------
-
-    def impute(self, X_missing, y=None, *, seed: int = 0, refine_rounds: int = 3):
-        """Fill NaNs. Observed features are clamped to a fixed-noise bridge at
-        every solver step; the whole solve is then repeated ``refine_rounds``
-        times from annealed restart times (re-noising the previous imputation)
-        so the conditioning — which only becomes informative at small t —
-        propagates back through the trajectory (RePaint-style refinement for
-        a deterministic solver)."""
-        assert self.forests is not None, "fit() first"
-        fcfg = self.fcfg
-        X_missing = np.asarray(X_missing, np.float32)
-        n, p = X_missing.shape
-        if y is None:
-            assert self.n_y == 1, "labels required for conditional models"
-            y_idx = np.zeros((n,), int)
-        else:
-            lut = {c: i for i, c in enumerate(self._classes)}
-            y_idx = np.asarray([lut[v] for v in np.asarray(y)])
-        out = X_missing.copy()
-        key = jax.random.PRNGKey(seed + 31)
-        ts = np.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff,
-                              fcfg.t_schedule))
-        h = 1.0 / (fcfg.n_t - 1)
-        for yi in range(self.n_y):
-            sel = np.where(y_idx == yi)[0]
-            if len(sel) == 0:
-                continue
-            rows = X_missing[sel]
-            mask = ~np.isnan(rows)                      # observed
-            scale = np.where(self._maxs[yi] > self._mins[yi],
-                             self._maxs[yi] - self._mins[yi], 1.0)
-            obs = (np.nan_to_num(rows) - self._mins[yi]) / scale * 2 - 1
-            key, k1, k_fix = jax.random.split(key, 3)
-            m = jnp.asarray(mask)
-            obs_d = jnp.asarray(obs)
-            # one fixed noise draw -> observed coords follow a single
-            # consistent bridge path across all solver steps
-            eps_fix = jax.random.normal(k_fix, (len(sel), p), jnp.float32)
-            stacked = PackedForest(
-                jnp.asarray(self.forests["feat"][:, yi]),
-                jnp.asarray(self.forests["thr_val"][:, yi]),
-                jnp.asarray(self.forests["leaf"][:, yi]),
-                fcfg.multi_output)
-            from repro.forest.packed import predict_forest
-
-            x0_est = jnp.zeros((len(sel), p), jnp.float32)
-            for r in range(max(1, refine_rounds)):
-                # annealed restart: round 0 from pure noise at t=1; later
-                # rounds re-noise the previous estimate from smaller t
-                frac = 1.0 if r == 0 else float(ts[-1]) * (0.6 ** r)
-                i_start = int(np.argmin(np.abs(ts - frac)))
-                i_start = max(i_start, 1)
-                key, kr = jax.random.split(key)
-                eps_r = jax.random.normal(kr, (len(sel), p), jnp.float32)
-                t0 = float(ts[i_start])
-                if fcfg.method == "flow":
-                    x = t0 * eps_r + (1 - t0) * x0_est
-                else:
-                    a0, s0 = itp.vp_alpha_sigma(jnp.float32(t0))
-                    x = a0 * x0_est + s0 * eps_r
-                for i in range(i_start, 0, -1):
-                    t = float(ts[i])
-                    h_i = float(ts[i] - ts[i - 1])
-                    f = PackedForest(stacked.feat[i], stacked.thr_val[i],
-                                     stacked.leaf[i], fcfg.multi_output)
-                    if fcfg.method == "flow":
-                        bridge = t * eps_fix + (1 - t) * obs_d
-                        x = jnp.where(m, bridge, x)
-                        x = x - h_i * predict_forest(x, f, fcfg.max_depth)
-                    else:
-                        a, s_ = itp.vp_alpha_sigma(jnp.float32(t))
-                        x = jnp.where(m, a * obs_d + s_ * eps_fix, x)
-                        score = predict_forest(x, f, fcfg.max_depth)
-                        t_next = float(ts[i - 1])
-                        a2, s2 = itp.vp_alpha_sigma(jnp.float32(t_next))
-                        eps_hat = -s_ * score
-                        x0_hat = jnp.clip((x - s_ * eps_hat) / a, -1.5, 1.5)
-                        eps_hat = (x - a * x0_hat) / s_
-                        x = a2 * x0_hat + s2 * eps_hat
-                x0_est = jnp.where(m, obs_d, x)
-            x = x0_est
-            vals = (np.asarray(x) + 1) / 2 * scale + self._mins[yi]
-            filled = np.where(mask, rows, vals)
-            out[sel] = filled
-        return out
-
-    # ------------------------------------------------------------------
-    # diagnostics
-    # ------------------------------------------------------------------
+    def impute(self, X_missing, y=None, *, seed: int = 0,
+               refine_rounds: int = 3):
+        assert self.artifacts is not None, "fit() first"
+        return _impute(self.artifacts, X_missing, y, seed=seed,
+                       refine_rounds=refine_rounds)
 
     def trees_at_best_iteration(self):
-        """Paper Fig. 3: number of trees kept per timestep (mean over y, subs)."""
-        br = self.forests["best_round"]  # [n_t, n_y, n_sub]
-        return np.mean(br + 1, axis=(1, 2))
+        return self.artifacts.trees_at_best_iteration()
+
+    # -- legacy attribute surface ------------------------------------------
+
+    @property
+    def forests(self):
+        if self.artifacts is None:
+            return None
+        if self._forests_host is None:  # device->host copy once, not per access
+            self._forests_host = {
+                k: np.asarray(getattr(self.artifacts, k)) for k in
+                ("feat", "thr_val", "leaf", "best_round", "rounds_run",
+                 "val_curve")}
+        return self._forests_host
+
+    @property
+    def n_y(self):
+        return self.artifacts.n_y
+
+    @property
+    def p(self):
+        return self.artifacts.p
+
+    @property
+    def _classes(self):
+        return np.asarray(self.artifacts.classes)
+
+    @property
+    def _counts(self):
+        return np.asarray(self.artifacts.counts)
+
+    @property
+    def _mins(self):
+        return np.asarray(self.artifacts.mins)
+
+    @property
+    def _maxs(self):
+        return np.asarray(self.artifacts.maxs)

@@ -42,6 +42,41 @@ def flow_euler(x1, forests_stacked: PackedForest, depth: int, n_t: int,
     return x0
 
 
+def flow_heun(x1, forests_stacked: PackedForest, depth: int, n_t: int,
+              ts=None):
+    """Heun (explicit trapezoid) ODE integration of the learned flow.
+
+    Second-order accurate in h: each interval evaluates the vector field at
+    both endpoints — the forest trained at t_i for the predictor and the one
+    at t_{i-1} for the corrector — so coarse grids (small ``n_t``, where the
+    paper shows quality degrades fastest) lose much less than Euler does, at
+    2x the forest evaluations per step.
+    """
+    if ts is None:
+        ts = jnp.linspace(0.0, 1.0, n_t)
+    hs = (ts[1:] - ts[:-1])[::-1]            # descending intervals
+
+    def forest_at(i):
+        return PackedForest(forests_stacked.feat[i],
+                            forests_stacked.thr_val[i],
+                            forests_stacked.leaf[i],
+                            forests_stacked.multi_output)
+
+    def step(x, inp):
+        # forest at the current (larger) t predicts; forest at the target
+        # (smaller) t corrects. Scanning over *indices* into the closed-over
+        # stack (instead of two shifted copies as scan xs) keeps device
+        # memory at one forest stack, not three.
+        h, i = inp
+        v1 = predict_forest(x, forest_at(i), depth)
+        v2 = predict_forest(x - h * v1, forest_at(i - 1), depth)
+        return x - 0.5 * h * (v1 + v2), None
+
+    idx = jnp.arange(n_t - 1, 0, -1)         # timesteps n_t-1 ... 1
+    x0, _ = jax.lax.scan(step, x1, (hs, idx))
+    return x0
+
+
 def diffusion_ddim(x1, forests_stacked: PackedForest, depth: int, n_t: int,
                    eps: float, clip: float = 1.5, ts=None):
     """Deterministic DDIM / exponential-integrator sampling of the VP process.

@@ -14,6 +14,14 @@ import numpy as np
 
 
 class TabularSchema:
+    """Column-type schema: which raw columns are categorical / integer.
+
+    ``encode``/``decode`` map between the raw column layout and the
+    continuous representation the forest models are trained on.
+    ``to_dict``/``from_dict`` make the fitted schema JSON-portable so a
+    saved generator can decode on a serving host that never saw the
+    training data.
+    """
     def __init__(self, cat_cols: Sequence[int] = (),
                  int_cols: Sequence[int] = ()):
         self.cat_cols = sorted(cat_cols)
@@ -48,7 +56,10 @@ class TabularSchema:
 
     def decode(self, Z: np.ndarray) -> np.ndarray:
         Z = np.asarray(Z)
-        out = np.empty((Z.shape[0], self.n_raw), np.float64)
+        numeric = all(np.issubdtype(np.asarray(v).dtype, np.number)
+                      for v in self._cats.values())
+        out = np.empty((Z.shape[0], self.n_raw),
+                       np.float64 if numeric else object)
         k = len(self._num_cols)
         for i, j in enumerate(self._num_cols):
             col = Z[:, i].astype(np.float64)
@@ -61,3 +72,55 @@ class TabularSchema:
             out[:, c] = cats[np.argmax(block, axis=1)]
             k += len(cats)
         return out
+
+    def encode_with_missing(self, X: np.ndarray) -> np.ndarray:
+        """Like ``encode`` but NaNs survive the trip: a missing numeric cell
+        stays NaN, and a missing categorical cell NaNs its whole one-hot
+        block — exactly the mask shape imputation needs."""
+        X = np.asarray(X)
+        Z = self.encode(np.where(_isnan(X), 0, X) if X.dtype == object
+                        else np.nan_to_num(X.astype(np.float64)))
+        nan = _isnan(X)
+        for i, j in enumerate(self._num_cols):
+            Z[nan[:, j], i] = np.nan
+        k = len(self._num_cols)
+        for c in self.cat_cols:
+            w = len(self._cats[c])
+            Z[nan[:, c], k:k + w] = np.nan
+            k += w
+        return Z
+
+    # -- JSON portability ---------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "cat_cols": list(self.cat_cols),
+            "int_cols": list(self.int_cols),
+            "n_raw": int(self.n_raw),
+            "cats": {str(c): np.asarray(v).tolist()
+                     for c, v in self._cats.items()},
+            "int_lo": {str(c): float(v) for c, v in self._int_lo.items()},
+            "int_hi": {str(c): float(v) for c, v in self._int_hi.items()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TabularSchema":
+        schema = cls(cat_cols=d["cat_cols"], int_cols=d["int_cols"])
+        schema.n_raw = int(d["n_raw"])
+        schema._cats = {int(c): np.asarray(v) for c, v in d["cats"].items()}
+        schema._int_lo = {int(c): v for c, v in d["int_lo"].items()}
+        schema._int_hi = {int(c): v for c, v in d["int_hi"].items()}
+        schema._num_cols = [j for j in range(schema.n_raw)
+                            if j not in schema.cat_cols]
+        return schema
+
+
+def _isnan(X: np.ndarray) -> np.ndarray:
+    """Elementwise NaN test that also works on object arrays (mixed string /
+    float columns)."""
+    if X.dtype != object:
+        return np.isnan(X.astype(np.float64, copy=False)) \
+            if np.issubdtype(X.dtype, np.floating) else np.zeros(X.shape, bool)
+    # x != x catches every NaN flavour (float, np.float32/64) elementwise;
+    # strings and other types compare equal to themselves
+    return np.asarray(X != X, dtype=bool)

@@ -100,14 +100,16 @@ def make_distributed_fit(mesh: Mesh, fcfg: ForestConfig,
     ens_spec = P(model_axis)
     try:
         from jax import shard_map  # jax >= 0.6
+        replication_kw = {"check_vma": False}
     except ImportError:  # pragma: no cover
         from jax.experimental.shard_map import shard_map
+        replication_kw = {"check_rep": False}  # pre-0.6 spelling
     mapped = shard_map(
         per_device, mesh=mesh,
         in_specs=(row_spec, row_spec, row_spec, ens_spec, ens_spec,
                   P(model_axis, None, None)),
         out_specs=jax.tree_util.tree_map(lambda _: P(model_axis), _result_spec()),
-        check_vma=False)
+        **replication_kw)
     return jax.jit(mapped)
 
 

@@ -1,0 +1,27 @@
+"""Composable tabular-generation API (paper's ForestFlow/ForestDiffusion).
+
+Layers, bottom-up:
+
+* :mod:`repro.tabgen.artifacts`  — :class:`ForestArtifacts`, the trained
+  model as a registered JAX pytree with ``save``/``load``.
+* :mod:`repro.tabgen.samplers`   — named solver registry
+  (``euler``/``heun`` for flow, ``ddim``/``em`` for diffusion);
+  ``@register_sampler`` adds more without touching the trainer.
+* :mod:`repro.tabgen.fitting`    — :func:`fit_artifacts`.
+* :mod:`repro.tabgen.sampling`   — :func:`sample`, one jitted class-vmapped
+  device program per generate call.
+* :mod:`repro.tabgen.imputation` — :func:`impute`.
+* :mod:`repro.tabgen.facade`     — :class:`TabularGenerator`, the
+  schema-aware fit/generate/impute/save/load front door.
+
+``repro.core.forest_flow.ForestGenerativeModel`` remains as a deprecation
+shim over these pieces.
+"""
+from repro.tabgen.artifacts import ForestArtifacts  # noqa: F401
+from repro.tabgen.facade import TabularGenerator  # noqa: F401
+from repro.tabgen.fitting import fit_artifacts, prepare_classes  # noqa: F401
+from repro.tabgen.imputation import impute  # noqa: F401
+from repro.tabgen.samplers import (  # noqa: F401
+    default_sampler, get_sampler, list_samplers, register_sampler)
+from repro.tabgen.sampling import (  # noqa: F401
+    sample, sample_labels, sample_loop_reference)

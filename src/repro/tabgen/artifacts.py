@@ -1,0 +1,195 @@
+"""ForestArtifacts: the trained model as a registered JAX pytree.
+
+Everything a sampler or serving host needs lives here, resident on device
+exactly once:
+
+* the stacked packed forests ``[n_t, n_y, n_sub, T, ...]`` (all timesteps,
+  all classes — sliced on device, never re-uploaded per call; the seed
+  code re-wrapped host arrays into a :class:`PackedForest` on every
+  ``generate``),
+* per-class min/max scalers ``[n_y, p]``,
+* the class table / empirical counts for label sampling,
+* early-stopping diagnostics (``best_round`` / ``val_curve``),
+* the :class:`ForestConfig` as static aux data (hashable, so an artifacts
+  object can cross a ``jit`` boundary whole).
+
+``save``/``load`` round-trip through a single ``.npz`` plus a JSON sidecar,
+making trained models portable to the serving path
+(:mod:`repro.launch.serve_forest`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ForestConfig
+from repro.forest.packed import PackedForest
+
+FORMAT_VERSION = 1
+
+
+def scaler_span(mins, maxs):
+    """``max - min`` with degenerate columns (max <= min) pinned to 1 — THE
+    per-class scaler convention shared by fit, sample, and impute. Bool
+    arithmetic instead of ``where`` so it evaluates identically on numpy
+    and jax arrays."""
+    gt = maxs > mins
+    return (maxs - mins) * gt + (1 - gt)
+
+
+def rescale(x, mins, maxs):
+    """Data space -> model space [-1, 1]."""
+    return (x - mins) / scaler_span(mins, maxs) * 2.0 - 1.0
+
+
+def unscale(x, mins, maxs):
+    """Model space [-1, 1] -> data space."""
+    return (x + 1.0) / 2.0 * scaler_span(mins, maxs) + mins
+
+# device arrays = pytree leaves, in flatten order; classes/counts are host
+# metadata and travel in the static aux data instead
+_LEAF_FIELDS = ("feat", "thr_val", "leaf", "best_round", "rounds_run",
+                "val_curve", "mins", "maxs")
+_ARRAY_FIELDS = _LEAF_FIELDS + ("classes", "counts")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ForestArtifacts:
+    feat: jnp.ndarray        # [n_t, n_y, n_sub, T, H] int32
+    thr_val: jnp.ndarray     # [n_t, n_y, n_sub, T, H] fp32
+    leaf: jnp.ndarray        # [n_t, n_y, n_sub, T, L, out] fp32
+    best_round: jnp.ndarray  # [n_t, n_y, n_sub] int32
+    rounds_run: jnp.ndarray  # [n_t, n_y, n_sub] int32
+    val_curve: jnp.ndarray   # [n_t, n_y, n_sub, T] fp32
+    mins: jnp.ndarray        # [n_y, p] fp32 per-class scaler lows
+    maxs: jnp.ndarray        # [n_y, p] fp32 per-class scaler highs
+    classes: np.ndarray      # [n_y] original label values (host)
+    counts: np.ndarray       # [n_y] class counts (host)
+    config: ForestConfig     # static
+
+    # -- pytree protocol ----------------------------------------------------
+    # classes/counts go into aux data (as hashable tuples) so a whole
+    # artifacts object can cross a jit boundary: only device arrays trace
+
+    def tree_flatten(self):
+        aux = (self.config, tuple(np.asarray(self.classes).tolist()),
+               tuple(np.asarray(self.counts).tolist()))
+        return tuple(getattr(self, f) for f in _LEAF_FIELDS), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        config, classes, counts = aux
+        return cls(*leaves, classes=np.asarray(classes),
+                   counts=np.asarray(counts), config=config)
+
+    # -- shape helpers ------------------------------------------------------
+
+    @property
+    def n_t(self) -> int:
+        return self.feat.shape[0]
+
+    @property
+    def n_y(self) -> int:
+        return self.feat.shape[1]
+
+    @property
+    def p(self) -> int:
+        return self.mins.shape[1]
+
+    def class_forest(self, yi: int) -> PackedForest:
+        """Packed forest stack [n_t, ...] for one class — a device-side
+        slice of the cached arrays, no host round-trip."""
+        return PackedForest(self.feat[:, yi], self.thr_val[:, yi],
+                            self.leaf[:, yi], self.config.multi_output)
+
+    def trees_at_best_iteration(self) -> np.ndarray:
+        """Paper Fig. 3: trees kept per timestep (mean over y, sub)."""
+        return np.mean(np.asarray(self.best_round) + 1, axis=(1, 2))
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_fit(cls, forests: dict, mins, maxs, classes, counts,
+                 config: ForestConfig) -> "ForestArtifacts":
+        """Bundle raw fit outputs; forest arrays go to device once, here."""
+        return cls(
+            feat=jnp.asarray(forests["feat"], jnp.int32),
+            thr_val=jnp.asarray(forests["thr_val"], jnp.float32),
+            leaf=jnp.asarray(forests["leaf"], jnp.float32),
+            best_round=jnp.asarray(forests["best_round"], jnp.int32),
+            rounds_run=jnp.asarray(forests["rounds_run"], jnp.int32),
+            val_curve=jnp.asarray(forests["val_curve"], jnp.float32),
+            mins=jnp.asarray(mins, jnp.float32),
+            maxs=jnp.asarray(maxs, jnp.float32),
+            classes=np.asarray(classes),
+            counts=np.asarray(counts),
+            config=config)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path: str, extra_meta: Optional[dict] = None) -> str:
+        """Write ``<path>.npz`` (arrays) + ``<path>.json`` (config + meta).
+
+        ``extra_meta`` lets callers (e.g. :class:`TabularGenerator`) ride
+        schema information along in the same sidecar. Returns the base path.
+        """
+        base = path[:-4] if path.endswith(".npz") else path
+        d = os.path.dirname(base)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        arrays = {f: np.asarray(getattr(self, f)) for f in _ARRAY_FIELDS}
+        if arrays["classes"].dtype == object:
+            # np.load(allow_pickle=False) rejects pickled object arrays.
+            # Re-inferring from the list recovers a concrete dtype (e.g.
+            # pandas-style object-of-int labels round-trip as int64);
+            # genuinely mixed labels fall back to fixed-width unicode.
+            coerced = np.asarray(arrays["classes"].tolist())
+            arrays["classes"] = (coerced if coerced.dtype != object
+                                 else arrays["classes"].astype(str))
+        np.savez(base + ".npz", **arrays)
+        meta = {
+            "format_version": FORMAT_VERSION,
+            "config": dataclasses.asdict(self.config),
+        }
+        if extra_meta:
+            meta.update(extra_meta)
+        with open(base + ".json", "w") as f:
+            json.dump(meta, f, indent=1)
+        return base
+
+    @classmethod
+    def load(cls, path: str, meta: Optional[dict] = None) -> "ForestArtifacts":
+        """``meta`` lets a caller that already read the sidecar (e.g.
+        :class:`TabularGenerator`) skip the second JSON parse."""
+        base = path[:-4] if path.endswith(".npz") else path
+        if meta is None:
+            with open(base + ".json") as f:
+                meta = json.load(f)
+        if meta.get("format_version", 0) > FORMAT_VERSION:
+            raise ValueError(
+                f"artifacts at {base} were written by a newer format "
+                f"({meta['format_version']} > {FORMAT_VERSION})")
+        config = ForestConfig(**meta["config"])
+        kw = {}
+        with np.load(base + ".npz", allow_pickle=False) as data:
+            for f in _ARRAY_FIELDS:
+                arr = data[f]
+                if f in ("classes", "counts"):
+                    kw[f] = arr
+                else:
+                    kw[f] = jnp.asarray(arr)
+        return cls(config=config, **kw)
+
+    @staticmethod
+    def load_meta(path: str) -> dict:
+        """Read just the JSON sidecar (schema, config) without the arrays."""
+        base = path[:-4] if path.endswith(".npz") else path
+        with open(base + ".json") as f:
+            return json.load(f)

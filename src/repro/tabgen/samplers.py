@@ -1,0 +1,84 @@
+"""Sampler registry: named ODE/SDE solvers behind one calling convention.
+
+The seed code dispatched solvers with an ``if/elif`` chain inside
+``generate()``; adding a solver meant editing the trainer class. Here each
+solver registers itself under a name with the interpolant family it
+integrates, and :func:`repro.tabgen.sampling.sample` looks it up — new
+solvers are one decorated function away.
+
+Unified signature (extra knobs arrive as keywords and may be ignored):
+
+    fn(x1, forests, *, depth, n_t, ts, key, eps) -> x0
+
+``forests`` is a :class:`PackedForest` whose arrays carry a leading
+``[n_t]`` timestep axis; ``ts`` is the (possibly non-uniform) grid the
+forests were trained on.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+from repro.core import generate as G
+
+
+class SamplerSpec(NamedTuple):
+    fn: Callable            # unified-signature solver
+    method: str             # "flow" | "diffusion" — interpolant it solves
+    stochastic: bool        # consumes the PRNG key
+
+
+_REGISTRY: Dict[str, SamplerSpec] = {}
+
+
+def register_sampler(name: str, *, method: str, stochastic: bool = False):
+    """Decorator: register ``fn`` under ``name``. Last registration wins so
+    downstream code can override a stock solver."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[name] = SamplerSpec(fn, method, stochastic)
+        return fn
+
+    return deco
+
+
+def get_sampler(name: str) -> SamplerSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sampler {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_samplers(method: str = None) -> Tuple[str, ...]:
+    return tuple(sorted(n for n, s in _REGISTRY.items()
+                        if method is None or s.method == method))
+
+
+def default_sampler(method: str, diff_sampler: str = "ddim") -> str:
+    """The config-implied sampler name (mirrors the old if/elif dispatch)."""
+    return "euler" if method == "flow" else diff_sampler
+
+
+# ---------------------------------------------------------------------------
+# stock solvers
+# ---------------------------------------------------------------------------
+
+@register_sampler("euler", method="flow")
+def _euler(x1, forests, *, depth, n_t, ts, key=None, eps=0.0):
+    return G.flow_euler(x1, forests, depth, n_t, ts=ts)
+
+
+@register_sampler("heun", method="flow")
+def _heun(x1, forests, *, depth, n_t, ts, key=None, eps=0.0):
+    return G.flow_heun(x1, forests, depth, n_t, ts=ts)
+
+
+@register_sampler("ddim", method="diffusion")
+def _ddim(x1, forests, *, depth, n_t, ts, key=None, eps=1e-3):
+    return G.diffusion_ddim(x1, forests, depth, n_t, eps, ts=ts)
+
+
+@register_sampler("em", method="diffusion", stochastic=True)
+def _em(x1, forests, *, depth, n_t, ts, key, eps=1e-3):
+    return G.diffusion_em(x1, forests, depth, n_t, eps, key, ts=ts)

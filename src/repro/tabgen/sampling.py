@@ -1,0 +1,156 @@
+"""Generation: one jitted, class-vmapped solve per call.
+
+The seed ``generate()`` looped over classes in Python, re-wrapped (and
+re-uploaded) each class's forests into a :class:`PackedForest`, and launched
+one solver program per class — ``n_y`` device dispatches per call. Here the
+whole call is a single program: noise is drawn on device, the chosen sampler
+integrates all classes at once (``vmap`` over the stacked ``[n_y]`` axis of
+:class:`ForestArtifacts`), per-class unscaling happens inside the same
+program, and padding rows (classes get unequal row counts) are dropped on
+the host afterwards.
+
+``pad_to`` rounds the per-class row budget up to a fixed bucket so a serving
+host (:mod:`repro.launch.serve_forest`) can pre-compile one program per
+(sampler, bucket) and reuse it for every request size below the bucket.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import interpolants as itp
+from repro.forest.packed import PackedForest
+from repro.tabgen.artifacts import ForestArtifacts, unscale
+from repro.tabgen.samplers import default_sampler, get_sampler
+
+
+def sample_labels(counts: np.ndarray, n: int, rng: np.random.Generator,
+                  mode: str = "label") -> np.ndarray:
+    """Class indices for ``n`` rows. ``label`` = deterministic empirical
+    proportions (paper C.4); ``multinomial`` = iid draws."""
+    counts = np.asarray(counts)
+    if mode == "multinomial":
+        probs = counts / counts.sum()
+        idx = rng.choice(len(counts), size=n, p=probs)
+    else:
+        reps = np.floor(n * counts / counts.sum()).astype(int)
+        rem = n - reps.sum()
+        frac = n * counts / counts.sum() - reps
+        extra = np.argsort(-frac)[:rem]
+        reps[extra] += 1
+        idx = np.repeat(np.arange(len(counts)), reps)
+    idx.sort()
+    return idx
+
+
+@partial(jax.jit, static_argnames=("solver_fn", "m", "depth", "n_t",
+                                   "multi_output", "eps"))
+def _solve_all_classes(feat, thr_val, leaf, keys, mins, maxs, ts, *,
+                       solver_fn, m: int, depth: int, n_t: int,
+                       multi_output: bool, eps: float):
+    """[n_t, n_y, ...] forests -> [n_y, m, p] unscaled samples; one program.
+
+    The jit cache key is (solver fn, bucket m, forest shapes) — repeat calls
+    at the same bucket reuse the compiled program, and keying on the
+    resolved *function* (not its registry name) means re-registering a
+    sampler under an existing name correctly invalidates the cache.
+    """
+
+    def one_class(feat_c, thr_c, leaf_c, key_c, mn, mx):
+        k_x1, k_solve = jax.random.split(key_c)
+        # counter-based per-row noise: row i draws the same x1 whatever the
+        # bucket m, so deterministic samplers are padding-invariant (a
+        # request served at bucket 256 equals the same request at 1024)
+        row_keys = jax.vmap(jax.random.fold_in, (None, 0))(k_x1, jnp.arange(m))
+        x1 = jax.vmap(
+            lambda k: jax.random.normal(k, (mn.shape[0],), jnp.float32)
+        )(row_keys)
+        forests = PackedForest(feat_c, thr_c, leaf_c, multi_output)
+        x0 = solver_fn(x1, forests, depth=depth, n_t=n_t, ts=ts,
+                       key=k_solve, eps=eps)
+        return unscale(x0, mn, mx)
+
+    return jax.vmap(one_class, in_axes=(1, 1, 1, 0, 0, 0))(
+        feat, thr_val, leaf, keys, mins, maxs)
+
+
+def _resolve_sampler(fcfg, sampler: Optional[str]):
+    """Name -> spec, validated against the artifacts' interpolant family."""
+    name = sampler or default_sampler(fcfg.method, fcfg.diff_sampler)
+    spec = get_sampler(name)
+    if spec.method != fcfg.method:
+        raise ValueError(
+            f"sampler {name!r} integrates {spec.method!r} but artifacts "
+            f"were trained with method={fcfg.method!r}")
+    return name, spec
+
+
+def sample(artifacts: ForestArtifacts, n: int, *,
+           sampler: Optional[str] = None, seed: int = 0,
+           pad_to: Optional[int] = None):
+    """Generate ``n`` rows (and their labels) from trained artifacts.
+
+    One device dispatch regardless of the number of classes. ``pad_to``
+    fixes the per-class row bucket (>= the largest per-class request) for
+    jit-cache-friendly serving.
+    """
+    fcfg = artifacts.config
+    _, spec = _resolve_sampler(fcfg, sampler)
+    rng = np.random.default_rng(seed)
+    label_idx = sample_labels(artifacts.counts, n, rng, fcfg.label_sampler)
+    n_y = artifacts.n_y
+    per_class = np.bincount(label_idx, minlength=n_y)
+    m = int(per_class.max())
+    if pad_to is not None:
+        if pad_to < m:
+            raise ValueError(f"pad_to={pad_to} < largest class batch {m}")
+        m = int(pad_to)
+    ts = jnp.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff,
+                                   fcfg.t_schedule))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 7), n_y)
+    x_all = _solve_all_classes(
+        artifacts.feat, artifacts.thr_val, artifacts.leaf, keys,
+        artifacts.mins, artifacts.maxs, ts,
+        solver_fn=spec.fn, m=m, depth=fcfg.max_depth, n_t=fcfg.n_t,
+        multi_output=fcfg.multi_output, eps=fcfg.eps_diff)
+    x_all = np.asarray(x_all)                       # [n_y, m, p]
+    X = np.concatenate([x_all[yi, :c] for yi, c in enumerate(per_class)])
+    y = np.repeat(np.asarray(artifacts.classes), per_class)
+    perm = rng.permutation(len(X))
+    return X[perm], y[perm]
+
+
+def sample_loop_reference(artifacts: ForestArtifacts, n: int, *,
+                          sampler: Optional[str] = None, seed: int = 0
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """The pre-redesign path: one solver dispatch per class, host-side
+    unscaling. Kept as the baseline for ``benchmarks/bench_generation.py``
+    (and as executable documentation of what the vmapped path replaced)."""
+    fcfg = artifacts.config
+    _, spec = _resolve_sampler(fcfg, sampler)
+    rng = np.random.default_rng(seed)
+    label_idx = sample_labels(artifacts.counts, n, rng, fcfg.label_sampler)
+    key = jax.random.PRNGKey(seed + 7)
+    ts = jnp.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff,
+                                   fcfg.t_schedule))
+    mins = np.asarray(artifacts.mins)
+    maxs = np.asarray(artifacts.maxs)
+    outs, labels = [], []
+    for yi in range(artifacts.n_y):
+        n_c = int((label_idx == yi).sum())
+        if n_c == 0:
+            continue
+        key, k1, k2 = jax.random.split(key, 3)
+        x1 = jax.random.normal(k1, (n_c, artifacts.p), jnp.float32)
+        x0 = spec.fn(x1, artifacts.class_forest(yi), depth=fcfg.max_depth,
+                     n_t=fcfg.n_t, ts=ts, key=k2, eps=fcfg.eps_diff)
+        outs.append(unscale(np.asarray(x0), mins[yi], maxs[yi]))
+        labels.append(np.full((n_c,), artifacts.classes[yi]))
+    X = np.concatenate(outs, axis=0)
+    y = np.concatenate(labels, axis=0)
+    perm = rng.permutation(len(X))
+    return X[perm], y[perm]

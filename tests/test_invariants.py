@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency; see README + the shim module
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.models import recurrent as rec
 from repro.models.moe import apply_moe, init_moe

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency; see README + the shim module
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels.flash_attention.fa_kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref

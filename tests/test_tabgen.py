@@ -1,0 +1,190 @@
+"""Tests for the composable tabular-generation API (repro.tabgen)."""
+import numpy as np
+import pytest
+
+from repro.config import ForestConfig
+from repro.data.tabular import two_moons
+from repro.eval import metrics as M
+from repro.tabgen import (ForestArtifacts, TabularGenerator, fit_artifacts,
+                          get_sampler, impute, list_samplers, sample,
+                          sample_loop_reference)
+
+
+@pytest.fixture(scope="module")
+def moons_flow_artifacts():
+    X, y = two_moons(400, seed=0)
+    fcfg = ForestConfig(method="flow", n_t=10, duplicate_k=15, n_trees=30,
+                        max_depth=4, n_bins=32, reg_lambda=1.0)
+    return fit_artifacts(X, y, fcfg, seed=0), X
+
+
+@pytest.fixture(scope="module")
+def moons_diffusion_artifacts():
+    X, y = two_moons(400, seed=0)
+    fcfg = ForestConfig(method="diffusion", n_t=12, duplicate_k=15,
+                        n_trees=30, max_depth=4, n_bins=32, reg_lambda=1.0)
+    return fit_artifacts(X, y, fcfg, seed=0), X
+
+
+def test_registry_contains_stock_samplers():
+    assert set(list_samplers()) >= {"euler", "heun", "ddim", "em"}
+    assert set(list_samplers("flow")) >= {"euler", "heun"}
+    assert set(list_samplers("diffusion")) >= {"ddim", "em"}
+    assert get_sampler("em").stochastic and not get_sampler("euler").stochastic
+    with pytest.raises(KeyError):
+        get_sampler("no_such_solver")
+
+
+@pytest.mark.parametrize("sampler", ["euler", "heun", "ddim"])
+def test_samplers_finite_and_close_to_data(sampler, moons_flow_artifacts,
+                                           moons_diffusion_artifacts):
+    """euler/heun/ddim all produce finite two-moons samples with sliced-W1
+    under a loose bound."""
+    if sampler == "ddim":
+        art, X = moons_diffusion_artifacts
+    else:
+        art, X = moons_flow_artifacts
+    G, yg = sample(art, 400, sampler=sampler, seed=1)
+    assert G.shape == (400, 2)
+    assert np.isfinite(G).all()
+    assert M.sliced_w1(G, X) < 0.25, sampler
+
+
+def test_sampler_method_mismatch_raises(moons_flow_artifacts):
+    art, _ = moons_flow_artifacts
+    with pytest.raises(ValueError):
+        sample(art, 16, sampler="ddim")
+
+
+def test_vmapped_matches_loop_reference_distribution(moons_flow_artifacts):
+    """The single-dispatch vmapped solve and the legacy per-class loop target
+    the same distribution (keys differ, so compare statistics)."""
+    art, X = moons_flow_artifacts
+    Gv, yv = sample(art, 400, seed=3)
+    Gl, yl = sample_loop_reference(art, 400, seed=3)
+    assert Gv.shape == Gl.shape
+    np.testing.assert_array_equal(np.sort(yv), np.sort(yl))
+    assert abs(M.sliced_w1(Gv, X) - M.sliced_w1(Gl, X)) < 0.1
+
+
+def test_pad_to_bucket_same_samples(moons_flow_artifacts):
+    """Padding the per-class batch to a serving bucket must not change the
+    rows that are kept (per-row counter-based noise keys; holds for
+    deterministic samplers — ``em`` draws fresh noise each step)."""
+    art, _ = moons_flow_artifacts
+    G1, y1 = sample(art, 100, seed=5)
+    G2, y2 = sample(art, 100, seed=5, pad_to=256)
+    np.testing.assert_array_equal(y1, y2)
+    np.testing.assert_allclose(G1, G2, rtol=1e-6)
+
+
+def test_save_load_roundtrip(tmp_path, moons_flow_artifacts):
+    """Loaded artifacts generate bit-identical samples under a fixed seed."""
+    art, _ = moons_flow_artifacts
+    base = art.save(str(tmp_path / "model"))
+    art2 = ForestArtifacts.load(base)
+    assert art2.config == art.config
+    np.testing.assert_array_equal(np.asarray(art.leaf), np.asarray(art2.leaf))
+    G1, y1 = sample(art, 200, seed=7)
+    G2, y2 = sample(art2, 200, seed=7)
+    np.testing.assert_array_equal(G1, G2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_artifacts_is_pytree(moons_flow_artifacts):
+    import jax
+    art, _ = moons_flow_artifacts
+    leaves, treedef = jax.tree_util.tree_flatten(art)
+    assert len(leaves) == 8  # device arrays only; classes/counts are aux
+    art2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert art2.config == art.config
+    np.testing.assert_array_equal(np.asarray(art.feat), np.asarray(art2.feat))
+    np.testing.assert_array_equal(art2.classes, art.classes)
+    # a whole artifacts object crosses a jit boundary (classes/counts static)
+    out = jax.jit(lambda a: a.mins + 1.0)(art)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(art.mins) + 1.0)
+
+
+def _mixed_dataset(n=400, seed=1):
+    rng = np.random.default_rng(seed)
+    x_num = rng.normal(size=n)
+    x_int = np.round(3 * x_num + rng.normal(size=n)).clip(-5, 5)
+    x_cat = (x_num > 0).astype(float) + rng.integers(0, 2, size=n)  # {0,1,2}
+    return np.stack([x_num, x_int, x_cat], 1)
+
+
+def test_tabular_generator_mixed_types_end_to_end(tmp_path):
+    X = _mixed_dataset()
+    fcfg = ForestConfig(method="flow", n_t=8, duplicate_k=10, n_trees=20,
+                        max_depth=4, n_bins=32, reg_lambda=1.0)
+    gen = TabularGenerator(fcfg, cat_cols=[2], int_cols=[1]).fit(X, seed=0)
+    G, _ = gen.generate(300, seed=1)
+    assert G.shape == (300, 3)
+    # categorical column decodes back onto observed categories
+    assert set(np.unique(G[:, 2])) <= set(np.unique(X[:, 2]))
+    # integer column is integral and clipped to the observed range
+    np.testing.assert_array_equal(G[:, 1], np.round(G[:, 1]))
+    assert G[:, 1].min() >= X[:, 1].min() and G[:, 1].max() <= X[:, 1].max()
+    # facade save/load round-trip preserves schema + samples
+    base = gen.save(str(tmp_path / "mixed"))
+    gen2 = TabularGenerator.load(base)
+    G2, _ = gen2.generate(300, seed=1)
+    np.testing.assert_array_equal(G, G2)
+    # imputation through the schema: observed cells untouched, NaNs filled
+    Xm = X[:40].copy()
+    Xm[:, 0] = np.nan
+    filled = gen.impute(Xm, seed=2, refine_rounds=2)
+    assert not np.isnan(filled.astype(float)).any()
+    np.testing.assert_array_equal(filled[:, 1:], Xm[:, 1:])
+
+
+def test_tabular_generator_string_categories():
+    rng = np.random.default_rng(3)
+    cont = rng.normal(size=200)
+    X = np.empty((200, 2), object)
+    X[:, 0] = cont
+    X[:, 1] = np.where(cont > 0, "hi", "lo")
+    fcfg = ForestConfig(n_t=4, duplicate_k=4, n_trees=6, max_depth=3,
+                        n_bins=16, reg_lambda=1.0)
+    gen = TabularGenerator(fcfg, cat_cols=[1]).fit(X, seed=0)
+    G, _ = gen.generate(60, seed=1)
+    assert set(G[:, 1]) <= {"hi", "lo"}
+    # string categories survive the correlation: "hi" rows skew positive
+    assert G[G[:, 1] == "hi", 0].astype(float).mean() > \
+        G[G[:, 1] == "lo", 0].astype(float).mean()
+
+
+def test_impute_functional_api(moons_flow_artifacts):
+    art, X = moons_flow_artifacts
+    Xm = X[:30].copy()
+    Xm[:, 1] = np.nan
+    # labels from the artifact table so the lut lookup is exercised
+    y = np.full(30, np.asarray(art.classes)[0])
+    filled = impute(art, Xm, y, seed=3, refine_rounds=2)
+    assert not np.isnan(filled).any()
+    np.testing.assert_array_equal(filled[:, 0], Xm[:, 0])
+
+
+def test_forest_server_buckets_and_stats(moons_flow_artifacts):
+    from repro.launch.serve_forest import ForestServer
+    art, _ = moons_flow_artifacts
+    server = ForestServer(art, buckets=(64, 256))
+    server.warmup()
+    for i, n in enumerate((17, 40, 90, 130)):
+        X, y = server.generate(n, seed=i)
+        assert X.shape == (n, 2) and len(y) == n
+    assert server.stats["requests"] == 4
+    assert server.rows_per_sec() > 0
+
+
+def test_deprecation_shim_still_works():
+    from repro.core.forest_flow import ForestGenerativeModel
+    X, y = two_moons(200, seed=0)
+    fcfg = ForestConfig(n_t=6, duplicate_k=5, n_trees=10, max_depth=3,
+                        n_bins=16, reg_lambda=1.0)
+    with pytest.deprecated_call():
+        model = ForestGenerativeModel(fcfg)
+    model.fit(X, y, seed=0)
+    G, yg = model.generate(100, seed=1)
+    assert G.shape == (100, 2)
+    assert model.forests["leaf"].shape[0] == fcfg.n_t

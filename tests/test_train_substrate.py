@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency; see README + the shim module
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.config import TrainConfig
 from repro.configs import get_arch
