@@ -1,0 +1,107 @@
+"""Training throughput vs device count — the paper §3.3 scaling claim,
+measured instead of asserted.
+
+Each device count runs in its own subprocess (``XLA_FLAGS=
+--xla_force_host_platform_device_count=D`` must precede jax init) and fits
+the same dataset through ``fit_artifacts``: the single-device trainer at
+D=1, the shard_map trainer on the ``auto_forest_mesh`` otherwise. Reports
+rows/sec, ensemble-rows/sec (rows x duplicate_k x ensembles / wall), the
+compiled per-device memory estimate of the sharded fit program ("peak HBM"
+on a real accelerator; host bytes on the virtual mesh), and subprocess peak
+RSS.
+
+CSV: name,us_per_call,derived. With ``json_path`` set, also writes
+``BENCH_training.json`` with one record per device count.
+
+Caveat: on the CPU host the virtual devices share the same cores, so
+rows/sec is NOT expected to scale with D here — the artifact proves the
+harness and records the sharding overhead; real scaling numbers come from
+running the same section on a TPU slice.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, run_measured
+
+_SNIPPET = r"""
+import time, json
+import jax
+import numpy as np
+
+from repro.config import ForestConfig
+from repro.data.tabular import synthetic_resource_dataset
+from repro.tabgen import fit_artifacts
+from repro.launch.mesh import auto_forest_mesh
+
+n, p, n_y = {n}, {p}, {n_y}
+X, y = synthetic_resource_dataset(n, p, n_y, seed=0)
+fcfg = ForestConfig(n_t={n_t}, duplicate_k={dup_k}, n_trees={n_trees},
+                    max_depth=4, n_bins=32, reg_lambda=1.0)
+mesh = auto_forest_mesh()
+t0 = time.time()
+art = fit_artifacts(X, y, fcfg, seed=0, mesh=mesh)
+wall = time.time() - t0
+n_ens = art.n_t * art.n_y
+
+hbm = None
+if mesh is not None:
+    # per-device memory of the compiled shard_map fit program: the
+    # fits-in-HBM number for this (rows, grid) slice
+    from repro.forest.distributed import input_specs_forest, make_distributed_fit
+    d_data = dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+    n_pad = -(-n // d_data) * d_data
+    bs = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    compiled = make_distributed_fit(mesh, fcfg).lower(
+        *input_specs_forest(fcfg, n_pad, p, max(bs, min(n_ens, 8)))).compile()
+    mem = compiled.memory_analysis()
+    hbm = getattr(mem, "temp_size_in_bytes", None)
+
+result = {{
+    "devices": len(jax.devices()),
+    "mesh": (dict(zip(mesh.axis_names, mesh.devices.shape))
+             if mesh is not None else None),
+    "fit_wall_s": wall,
+    "includes_compile": True,
+    "rows_per_sec": n * n_ens / wall,
+    "ensemble_rows_per_sec": n * fcfg.duplicate_k * n_ens / wall,
+    "per_device_temp_bytes": hbm,
+}}
+"""
+
+
+def main(quick: bool = True, json_path: str = None) -> None:
+    n, p, n_y = (2048, 8, 2) if quick else (65536, 32, 4)
+    n_t, dup_k, n_trees = (4, 10, 10) if quick else (10, 20, 40)
+    device_counts = (1, 8) if quick else (1, 2, 4, 8)
+    records = []
+    for d in device_counts:
+        snippet = _SNIPPET.format(n=n, p=p, n_y=n_y, n_t=n_t,
+                                  dup_k=dup_k, n_trees=n_trees)
+        # XLA_FLAGS must be in the env before the subprocess inits jax
+        r = run_measured(snippet, timeout=1800, env_extra={
+            "XLA_FLAGS": f"--xla_force_host_platform_device_count={d}"})
+        if r.get("error"):
+            emit(f"training/devices={d}", "fail", r["error"][-160:])
+            records.append({"devices": d, "error": r["error"][-800:]})
+            continue
+        r.setdefault("config", {"n": n, "p": p, "n_y": n_y, "n_t": n_t,
+                                "duplicate_k": dup_k, "n_trees": n_trees})
+        emit(f"training/devices={d}",
+             f"{r['fit_wall_s'] * 1e6:.0f}",
+             f"rows_per_sec={r['rows_per_sec']:.0f}|"
+             f"ensemble_rows_per_sec={r['ensemble_rows_per_sec']:.0f}|"
+             f"peak_rss_mb={r['peak_rss_bytes'] / 1e6:.0f}")
+        records.append(r)
+    if json_path:
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump({"bench": "training", "records": records}, f, indent=1)
+        emit("training/json", "-", json_path)
+
+
+if __name__ == "__main__":
+    main(json_path="BENCH_training.json")

@@ -2,15 +2,20 @@
 from __future__ import annotations
 
 import json
+import os
 import subprocess
 import sys
 import time
 
 
-def run_measured(snippet: str, timeout: int = 900) -> dict:
+def run_measured(snippet: str, timeout: int = 900,
+                 env_extra: dict = None) -> dict:
     """Run a python snippet in a subprocess; returns its printed JSON plus
     wall time and peak RSS (KiB->bytes). Each config gets a clean process so
-    peak memory is per-config (ru_maxrss is monotonic within a process)."""
+    peak memory is per-config (ru_maxrss is monotonic within a process).
+
+    ``env_extra`` adds/overrides env vars — e.g. ``XLA_FLAGS`` to set a
+    virtual device count, which must be in place before jax initialises."""
     wrapper = (
         "import resource, json, time\n"
         "t0 = time.time()\n"
@@ -21,10 +26,14 @@ def run_measured(snippet: str, timeout: int = 900) -> dict:
         "resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024\n"
         "print('\\n@@RESULT@@' + json.dumps(out))\n"
     )
+    env = {"PYTHONPATH": "src", "HOME": "/root", "PATH": "/usr/bin:/bin"}
+    if "JAX_PLATFORMS" in os.environ:    # scrubbed env: keep platform pin
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+    if env_extra:
+        env.update(env_extra)
     proc = subprocess.run([sys.executable, "-c", wrapper],
                           capture_output=True, text=True, timeout=timeout,
-                          env={"PYTHONPATH": "src", "HOME": "/root",
-                               "PATH": "/usr/bin:/bin"})
+                          env=env)
     if proc.returncode != 0:
         return {"error": proc.stderr[-1500:], "wall_s": None,
                 "peak_rss_bytes": None}

@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   quality           - Table 2 / 7: W1 + coverage + mean rank, 7 methods
   calo              - Table 3/4/5: chi^2 separation + classifier AUC
   generation        - Fig. 4 (bottom): SO vs MO generation time
+  training          - §3.3 scaling: fit throughput + memory vs device count
   ablation          - Fig. 3 / 10 / 11: early stopping + K/n_tree sweeps
   roofline          - dry-run roofline table (scale deliverable)
 
@@ -33,7 +34,7 @@ def main() -> None:
 
     from benchmarks import (bench_ablations, bench_calo, bench_generation,
                             bench_quality, bench_resource_scaling,
-                            bench_roofline)
+                            bench_roofline, bench_training)
     sections = {
         "resource_scaling": lambda: bench_resource_scaling.main(
             sizes=(200, 500, 1000) if quick else (1000, 3000, 10000)),
@@ -43,6 +44,9 @@ def main() -> None:
         "generation": lambda: bench_generation.main(
             quick=quick, json_path=os.path.join(args.json_dir,
                                                 "BENCH_generation.json")),
+        "training": lambda: bench_training.main(
+            quick=quick, json_path=os.path.join(args.json_dir,
+                                                "BENCH_training.json")),
         "ablation": lambda: bench_ablations.main(quick=quick),
         "roofline": lambda: bench_roofline.main(),
     }

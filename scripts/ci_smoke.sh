@@ -1,23 +1,29 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 tests + reduced-config example + generation benchmark.
-# Everything here must pass on a stock CPU container (no optional deps).
+# CI smoke: tier-1 tests + reduced-config example + benchmarks + distributed
+# fit. Everything here must pass on a stock CPU container (no optional deps).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 echo "== tier-1 test suite =="
-# the two deselects are pre-existing seed failures (LM-side, documented in
-# ROADMAP.md "Open items"); drop them once fixed
-python -m pytest -x -q \
-  --deselect tests/test_flops_model.py::test_fwd_flops_match_hlo_dense \
-  --deselect tests/test_sharding_and_dryrun.py::test_dryrun_code_path_small_mesh
+python -m pytest -x -q
 
 echo "== quickstart example (reduced config) =="
 python examples/quickstart.py --smoke
 
+echo "== distributed fit smoke (8 virtual devices, shard_map trainer) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m repro.launch.train_forest --demo --demo-rows 256 --demo-cols 4 \
+    --mesh 4x2 --n-t 4 --n-trees 6 --max-depth 3 --n-bins 16 --duplicate-k 6
+
 echo "== generation benchmark (emits BENCH_generation.json) =="
-# write to a scratch dir: the committed trajectory artifact stays untouched
+# write to a scratch dir: the committed trajectory artifacts stay untouched
 # and a stale copy can't mask a benchmark failure
 bench_out="$(mktemp -d)"
 python benchmarks/run.py --only generation --json-dir "$bench_out"
 test -s "$bench_out/BENCH_generation.json" && echo "BENCH_generation.json written"
+
+echo "== training benchmark (emits BENCH_training.json) =="
+python benchmarks/run.py --only training --json-dir "$bench_out"
+test -s "$bench_out/BENCH_training.json" && echo "BENCH_training.json written"

@@ -27,6 +27,29 @@ HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
 
+def hlo_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    Older jaxlibs return one properties dict; newer ones return a list with
+    one dict per partition (and may return None when the backend provides no
+    analysis). Normalises to a single flat dict, summing numeric entries
+    across partitions.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    out: Dict[str, float] = {}
+    for part in cost:
+        for k, v in part.items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0) + v
+            else:
+                out.setdefault(k, v)
+    return out
+
+
 def _attn_proj_flops(cfg, n_tok):
     h, kv, d, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_model, cfg.d_head
     return 2 * n_tok * d * (h * hd) + 2 * n_tok * d * (kv * hd) * 2 \

@@ -37,6 +37,21 @@ def timesteps(method: str, n_t: int, eps: float, schedule: str = "uniform"):
     return jnp.linspace(lo, 1.0, n_t)
 
 
+def sample_bridge(key, x0, method: str, t, sigma_cfm: float = 0.0):
+    """Draw noise ``x1`` and the ``(x_t, target)`` training pair from one key.
+
+    The key is split so the CFM jitter inside :func:`make_xt_target` is
+    decorrelated from ``x1`` — passing the same key to both draws makes the
+    "independent" jitter exactly equal to ``x1`` (same key, same shape ⇒
+    identical normal sample), i.e. x_t = (t + sigma) x1 + (1-t) x0.
+    Returns ``(x1, xt, target)``.
+    """
+    k_noise, k_jitter = jax.random.split(key)
+    x1 = jax.random.normal(k_noise, x0.shape, jnp.float32)
+    xt, target = make_xt_target(method, x0, x1, t, sigma_cfm, k_jitter)
+    return x1, xt, target
+
+
 def make_xt_target(method: str, x0, x1, t, sigma_cfm: float = 0.0, key=None):
     """x0: data rows; x1: standard normal noise of the same shape; t scalar."""
     if method == "flow":

@@ -58,12 +58,12 @@ def _fit_one_sharded(x0, w, class_id, t, y_e, key2, fcfg: ForestConfig,
         shard_id = shard_id * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
     k_tr = jax.random.fold_in(key2[0], shard_id)
     k_va = jax.random.fold_in(key2[1], shard_id)
-    x1 = jax.random.normal(k_tr, x0d.shape, jnp.float32)
-    xt, tgt = itp.make_xt_target(fcfg.method, x0d, x1, t, fcfg.sigma, k_tr)
+    # sample_bridge splits each key so the CFM jitter is decorrelated from
+    # x1 (one key for both draws made the jitter exactly sigma * x1)
+    _, xt, tgt = itp.sample_bridge(k_tr, x0d, fcfg.method, t, fcfg.sigma)
     edges = _sketch_edges(xt, wd, fcfg.n_bins, data_axes)
     codes = transform(xt, edges)
-    x1v = jax.random.normal(k_va, x0d.shape, jnp.float32)
-    xtv, tgtv = itp.make_xt_target(fcfg.method, x0d, x1v, t, fcfg.sigma, k_va)
+    _, xtv, tgtv = itp.sample_bridge(k_va, x0d, fcfg.method, t, fcfg.sigma)
     codes_v = transform(xtv, edges)
     if fcfg.int8_codes:   # QuantileDMatrix-style narrow storage
         codes = pack_codes(codes, fcfg.n_bins)

@@ -211,7 +211,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: Path,
         return rec
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = fl.hlo_cost_analysis(compiled)
     # compiled.as_text() is post-SPMD classic HLO (collectives materialised);
     # lowered.as_text() would be StableHLO with shardings still symbolic.
     hlo = compiled.as_text()
@@ -240,9 +240,9 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: Path,
                 + getattr(mem, "argument_size_in_bytes", 0)),
             "repr": str(mem)[:2000],
         },
-        cost_analysis_raw={k: cost.get(k) for k in
+        cost_analysis_raw={k: cost[k] for k in
                            ("flops", "bytes accessed", "transcendentals")
-                           if cost and k in cost},
+                           if k in cost},
         collective_inventory=inv,
         collective_bytes_hlo_scaled=coll_hlo,
         scan_trip_count=trips,

@@ -15,3 +15,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 4, n_model: int = 2):
     """Small host-device mesh for tests (requires matching device count)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def auto_forest_mesh(model_axis_max: int = 8):
+    """(data, model) mesh over every visible device for forest training.
+
+    The model axis (ensemble-grid parallelism) gets the largest power of two
+    that divides the device count, is at most ``model_axis_max``, and stays
+    ≤ the data-axis size — rows usually outnumber ensembles per batch, so
+    the data axes keep the majority of the devices. Returns ``None`` on a
+    single device (callers fall back to the single-device trainer).
+    """
+    n = len(jax.devices())
+    if n == 1:
+        return None
+    model = 1
+    while (model * 2 <= model_axis_max and (model * 2) ** 2 <= n
+           and n % (model * 2) == 0):
+        model *= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))

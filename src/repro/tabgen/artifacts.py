@@ -52,10 +52,14 @@ def unscale(x, mins, maxs):
     """Model space [-1, 1] -> data space."""
     return (x + 1.0) / 2.0 * scaler_span(mins, maxs) + mins
 
+# the BoostResult fields a trainer saves per ensemble — the single source
+# of truth shared by run_batch checkpoints and from_grid_results assembly
+RESULT_FIELDS = ("feat", "thr_val", "leaf", "best_round", "rounds_run",
+                 "val_curve")
+
 # device arrays = pytree leaves, in flatten order; classes/counts are host
 # metadata and travel in the static aux data instead
-_LEAF_FIELDS = ("feat", "thr_val", "leaf", "best_round", "rounds_run",
-                "val_curve", "mins", "maxs")
+_LEAF_FIELDS = RESULT_FIELDS + ("mins", "maxs")
 _ARRAY_FIELDS = _LEAF_FIELDS + ("classes", "counts")
 
 
@@ -114,6 +118,25 @@ class ForestArtifacts:
         return np.mean(np.asarray(self.best_round) + 1, axis=(1, 2))
 
     # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_grid_results(cls, results: dict, n_t: int, n_y: int, mins, maxs,
+                          classes, counts,
+                          config: ForestConfig) -> "ForestArtifacts":
+        """Assemble per-ensemble fit outputs into stacked artifacts.
+
+        ``results`` maps ``(ti, yi)`` to ``{field: array}`` — the host-side
+        per-ensemble slices produced by either trainer (for the sharded
+        trainer these are the gathered per-model-axis shards). Restacks to
+        ``[n_t, n_y, ...]`` and bundles the per-class scalers.
+        """
+        def stack(field):
+            return np.stack([
+                np.stack([results[(ti, yi)][field] for yi in range(n_y)])
+                for ti in range(n_t)])
+
+        forests = {k: stack(k) for k in RESULT_FIELDS}
+        return cls.from_fit(forests, mins, maxs, classes, counts, config)
 
     @classmethod
     def from_fit(cls, forests: dict, mins, maxs, classes, counts,

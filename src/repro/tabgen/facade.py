@@ -43,13 +43,17 @@ class TabularGenerator:
 
     def fit(self, X, y=None, *, seed: int = 0,
             checkpoint_dir: Optional[str] = None, resume: bool = False,
-            ensembles_per_batch: int = 0) -> "TabularGenerator":
+            ensembles_per_batch: int = 0, mesh=None) -> "TabularGenerator":
+        """``mesh`` routes training through the shard_map trainer: a
+        :class:`jax.sharding.Mesh`, ``"auto"`` (one mesh over every visible
+        device), or ``None`` for the single-device path."""
         if self.schema is not None:
             self.schema.fit(X)
             X = self.schema.encode(X)
         self.artifacts = fit_artifacts(
             X, y, self.fcfg, seed=seed, checkpoint_dir=checkpoint_dir,
-            resume=resume, ensembles_per_batch=ensembles_per_batch)
+            resume=resume, ensembles_per_batch=ensembles_per_batch,
+            mesh=mesh)
         return self
 
     def generate(self, n: int, *, sampler: Optional[str] = None,

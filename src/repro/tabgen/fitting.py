@@ -9,6 +9,8 @@ Memory discipline (paper §3.3, re-expressed for accelerators):
   strictly stronger version of the shared-memmap fix).
 * Issue 3 — trained ensembles are streamed to disk per batch
   (``checkpoint_dir``) and training resumes from the manifest after failure.
+  The manifest carries a config fingerprint so a resume can never silently
+  mix batches trained under a different configuration.
 * Issues 5-7 — classes are sorted/padded into dense [n_y, n_max, p] blocks
   (static-shape slices, no boolean-mask copies), one quantised code matrix is
   shared by all p outputs of an ensemble (DMatrix reuse), and everything is
@@ -17,12 +19,21 @@ Memory discipline (paper §3.3, re-expressed for accelerators):
 Algorithmic additions from §3.4: multi-output trees, early stopping on a
 fresh-noise validation set, per-class min-max scalers, empirical label
 sampling.
+
+Scaling (paper §3.3's 370x-larger-datasets claim): ``fit_artifacts`` also
+routes through the shard_map trainer (:mod:`repro.forest.distributed`) when
+given a ``mesh`` — rows sharded over the data axes with weight-masked class
+conditioning (no padded per-class blocks), the (timestep, class) ensemble
+grid sharded over the model axis, and host→device streaming of row chunks so
+X never has to fit on a single device. ``mesh="auto"`` builds one from
+``jax.devices()``; ``mesh=None`` keeps the single-device path.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +43,8 @@ from repro.config import ForestConfig
 from repro.core import interpolants as itp
 from repro.forest.binning import edges_with_sentinel, transform
 from repro.forest.boosting import fit_ensemble
-from repro.tabgen.artifacts import ForestArtifacts, rescale
+from repro.tabgen.artifacts import (RESULT_FIELDS, ForestArtifacts,
+                                    rescale)
 
 
 def weighted_edges(x, w, n_bins: int):
@@ -81,16 +93,149 @@ def prepare_classes(X: np.ndarray, y: Optional[np.ndarray]):
     return Xc, Wc, classes, counts, mins, maxs
 
 
+def class_stats_streaming(X, y, row_chunk: int = 65536):
+    """Classes / counts / per-class min-max scalers in one streaming pass
+    over row chunks — never materialises a class-sorted or padded copy of X
+    (the sharded-trainer replacement for :func:`prepare_classes`).
+    """
+    n, p = X.shape
+    if y is None:
+        y = np.zeros((n,), np.int64)
+    classes = np.unique(np.asarray(y))
+    n_y = len(classes)
+    counts = np.zeros((n_y,), np.int64)
+    mins = np.full((n_y, p), np.inf, np.float32)
+    maxs = np.full((n_y, p), -np.inf, np.float32)
+    for s in range(0, n, row_chunk):
+        xb = np.asarray(X[s:s + row_chunk], np.float32)
+        cid = np.searchsorted(classes, np.asarray(y[s:s + row_chunk]))
+        for i in np.unique(cid):
+            sel = xb[cid == i]
+            counts[i] += len(sel)
+            mins[i] = np.minimum(mins[i], sel.min(axis=0))
+            maxs[i] = np.maximum(maxs[i], sel.max(axis=0))
+    return classes, counts, mins, maxs
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manifest
+# ---------------------------------------------------------------------------
+
+def _manifest_fingerprint(fcfg: ForestConfig, *, n_t: int, n_y: int,
+                          batch_size: int, n_rows: int, p: int,
+                          trainer: str) -> dict:
+    """Everything that determines which ensemble lands in which batch file.
+
+    Resuming under a different ``ensembles_per_batch`` or ``ForestConfig``
+    used to silently mix stale ``batch_*.npz`` files with fresh ones; now the
+    manifest pins the full grid layout and the config, and a mismatch refuses
+    to resume. Deliberately *not* fingerprinted: the seed (resume may finish
+    another run's grid — completed batches never retrain) and the sharded
+    trainer's mesh shape (batches are whole trained ensembles, so a
+    checkpoint may be resumed on a different device count — elastic resume).
+    """
+    return {
+        "config": dataclasses.asdict(fcfg),
+        "grid": [n_t, n_y],
+        "ensembles_per_batch": batch_size,
+        "data_shape": [int(n_rows), int(p)],
+        "trainer": trainer,
+    }
+
+
+def _manifest_batch_size(checkpoint_dir: str) -> Optional[int]:
+    """The batch size an existing checkpoint was written with, if any."""
+    path = os.path.join(checkpoint_dir, "manifest.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f).get("fingerprint", {}).get("ensembles_per_batch")
+
+
+def _run_grid_batches(run_batch, grid, bs: int, *,
+                      checkpoint_dir: Optional[str], resume: bool,
+                      fingerprint: dict):
+    """Drive the (timestep, class) grid in batches with checkpoint/resume.
+
+    ``run_batch(chunk)`` trains ``chunk`` (a list of (ti, yi)) and returns
+    ``{field: np.ndarray}`` with leading dim ``len(chunk)``. Shared by the
+    single-device and sharded trainers, so both get the same Issue-3
+    streaming checkpoints and the same manifest safety.
+    """
+    manifest_path = (os.path.join(checkpoint_dir, "manifest.json")
+                     if checkpoint_dir else None)
+    done = set()
+    if resume and manifest_path and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        stale = manifest.get("fingerprint")
+        if stale != fingerprint:
+            diff = sorted(k for k in fingerprint
+                          if (stale or {}).get(k) != fingerprint[k])
+            raise ValueError(
+                f"checkpoint at {checkpoint_dir} was written under a "
+                f"different run configuration (mismatched: {diff}); "
+                "resuming would mix stale batch_*.npz files with new ones. "
+                "Pass resume=False (or a fresh checkpoint_dir) to retrain.")
+        done = set(tuple(e) for e in manifest["batches"])
+
+    results = {}
+    for b0 in range(0, len(grid), bs):
+        chunk = grid[b0:b0 + bs]
+        key_id = (b0, len(chunk))
+        if key_id in done:
+            data = np.load(os.path.join(checkpoint_dir, f"batch_{b0}.npz"))
+            res_np = {k: data[k] for k in data.files}
+        else:
+            res_np = run_batch(chunk)
+            if checkpoint_dir:   # Issue 3: stream to disk, checkpointed
+                os.makedirs(checkpoint_dir, exist_ok=True)
+                np.savez(os.path.join(checkpoint_dir, f"batch_{b0}.npz"),
+                         **res_np)
+                done.add(key_id)
+                with open(manifest_path, "w") as f:
+                    json.dump({"fingerprint": fingerprint,
+                               "batches": sorted(done)}, f)
+        for j, (ti, yi) in enumerate(chunk):
+            results[(ti, yi)] = {k: v[j] for k, v in res_np.items()}
+    return results
+
+
+# ---------------------------------------------------------------------------
+# single-device trainer
+# ---------------------------------------------------------------------------
+
 def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
                   seed: int = 0, checkpoint_dir: Optional[str] = None,
-                  resume: bool = False,
-                  ensembles_per_batch: int = 0) -> ForestArtifacts:
+                  resume: bool = False, ensembles_per_batch: int = 0,
+                  mesh=None, data_axes: Optional[Tuple[str, ...]] = None,
+                  model_axis: str = "model",
+                  row_chunk: int = 65536) -> ForestArtifacts:
     """Train all (timestep, class) ensembles; returns portable artifacts.
 
     One jitted+vmapped fit program trains ``ensembles_per_batch`` ensembles
     per dispatch; batches stream to ``checkpoint_dir`` (Issue 3) and
     ``resume=True`` restarts from the manifest.
+
+    ``mesh`` selects the trainer: ``None`` (default) is the single-device
+    path; a :class:`jax.sharding.Mesh` routes through the shard_map trainer
+    with rows sharded over ``data_axes`` and the ensemble grid over
+    ``model_axis``; the string ``"auto"`` builds a mesh from every visible
+    device (``repro.launch.mesh.auto_forest_mesh``) and falls back to the
+    single-device path when there is only one.
     """
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"mesh={mesh!r}: expected a Mesh, None, or "
+                             "'auto'")
+        from repro.launch.mesh import auto_forest_mesh
+        mesh = auto_forest_mesh()
+    if mesh is not None:
+        return _fit_artifacts_sharded(
+            X, y, fcfg, mesh, seed=seed, checkpoint_dir=checkpoint_dir,
+            resume=resume, ensembles_per_batch=ensembles_per_batch,
+            data_axes=data_axes, model_axis=model_axis, row_chunk=row_chunk)
+
     Xc, Wc, classes, counts, mins, maxs = prepare_classes(X, y)
     n_y, n_max, p = Xc.shape
     Xc_d = jnp.asarray(Xc)
@@ -109,14 +254,11 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
         wd = jnp.repeat(w, K, axis=0)
         k_tr = jax.random.fold_in(root, eid * 2)
         k_va = jax.random.fold_in(root, eid * 2 + 1)
-        x1 = jax.random.normal(k_tr, x0d.shape, jnp.float32)
-        xt, tgt = itp.make_xt_target(fcfg.method, x0d, x1, t,
-                                     fcfg.sigma, k_tr)
+        _, xt, tgt = itp.sample_bridge(k_tr, x0d, fcfg.method, t, fcfg.sigma)
         edges = weighted_edges(xt, wd, fcfg.n_bins)
         codes = transform(xt, edges)
-        x1v = jax.random.normal(k_va, x0d.shape, jnp.float32)
-        xtv, tgtv = itp.make_xt_target(fcfg.method, x0d, x1v, t,
-                                       fcfg.sigma, k_va)
+        _, xtv, tgtv = itp.sample_bridge(k_va, x0d, fcfg.method, t,
+                                         fcfg.sigma)
         codes_v = transform(xtv, edges)
         res = fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
                            codes_v, tgtv, wd, fcfg)
@@ -126,52 +268,149 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
 
     grid = [(ti, yi) for ti in range(fcfg.n_t) for yi in range(n_y)]
     bs = ensembles_per_batch or max(1, min(len(grid), 8))
-    manifest_path = (os.path.join(checkpoint_dir, "manifest.json")
-                     if checkpoint_dir else None)
-    done = set()
-    if resume and manifest_path and os.path.exists(manifest_path):
-        with open(manifest_path) as f:
-            done = set(tuple(e) for e in json.load(f)["batches"])
 
-    results = {}
-    for b0 in range(0, len(grid), bs):
-        chunk = grid[b0:b0 + bs]
-        key_id = (b0, len(chunk))
-        if key_id in done:
-            data = np.load(os.path.join(checkpoint_dir, f"batch_{b0}.npz"))
-            res_np = {k: data[k] for k in data.files}
-        else:
-            t_arr = jnp.asarray([ts[ti] for ti, _ in chunk], jnp.float32)
-            y_arr = jnp.asarray([yi for _, yi in chunk], jnp.int32)
-            e_arr = jnp.asarray([ti * n_y + yi for ti, yi in chunk],
-                                jnp.int32)
-            res = fit_batch(t_arr, y_arr, e_arr)
-            res_np = {
-                "feat": np.asarray(res.feat),
-                "thr_val": np.asarray(res.thr_val),
-                "leaf": np.asarray(res.leaf),
-                "best_round": np.asarray(res.best_round),
-                "rounds_run": np.asarray(res.rounds_run),
-                "val_curve": np.asarray(res.val_curve),
-            }
-            if checkpoint_dir:   # Issue 3: stream to disk, checkpointed
-                os.makedirs(checkpoint_dir, exist_ok=True)
-                np.savez(os.path.join(checkpoint_dir, f"batch_{b0}.npz"),
-                         **res_np)
-                done.add(key_id)
-                with open(manifest_path, "w") as f:
-                    json.dump({"batches": sorted(done)}, f)
-        for j, (ti, yi) in enumerate(chunk):
-            results[(ti, yi)] = {k: v[j] for k, v in res_np.items()}
+    def run_batch(chunk):
+        t_arr = jnp.asarray([ts[ti] for ti, _ in chunk], jnp.float32)
+        y_arr = jnp.asarray([yi for _, yi in chunk], jnp.int32)
+        e_arr = jnp.asarray([ti * n_y + yi for ti, yi in chunk], jnp.int32)
+        res = fit_batch(t_arr, y_arr, e_arr)
+        return {k: np.asarray(getattr(res, k)) for k in RESULT_FIELDS}
 
-    # stack into [n_t, n_y, ...]
-    def stack(field):
-        return np.stack([
-            np.stack([results[(ti, yi)][field] for yi in range(n_y)])
-            for ti in range(fcfg.n_t)])
+    fingerprint = _manifest_fingerprint(
+        fcfg, n_t=fcfg.n_t, n_y=n_y, batch_size=bs,
+        n_rows=np.asarray(X).shape[0], p=p, trainer="single")
+    results = _run_grid_batches(run_batch, grid, bs,
+                                checkpoint_dir=checkpoint_dir, resume=resume,
+                                fingerprint=fingerprint)
+    return ForestArtifacts.from_grid_results(results, fcfg.n_t, n_y, mins,
+                                             maxs, classes, counts, fcfg)
 
-    forests = {k: stack(k) for k in
-               ("feat", "thr_val", "leaf", "best_round", "rounds_run",
-                "val_curve")}
-    return ForestArtifacts.from_fit(forests, mins, maxs, classes, counts,
-                                    fcfg)
+
+# ---------------------------------------------------------------------------
+# sharded trainer (the paper's §3.3 scaling story, TPU-native)
+# ---------------------------------------------------------------------------
+
+def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
+                           checkpoint_dir: Optional[str], resume: bool,
+                           ensembles_per_batch: int,
+                           data_axes: Optional[Tuple[str, ...]],
+                           model_axis: str,
+                           row_chunk: int) -> ForestArtifacts:
+    """shard_map training from host data to :class:`ForestArtifacts`.
+
+    Rows (rescaled per class, weight-masked class conditioning — no padded
+    [n_y, n_max, p] blocks) are sharded over the data axes and streamed to
+    the devices chunk by chunk via ``make_array_from_callback``: each device
+    uploads only its own row slice, so X never has to fit on one device.
+    The (timestep, class) grid is sharded over the model axis in batches of
+    ``ensembles_per_batch`` (rounded up to the model-axis size), reusing the
+    same checkpoint/resume manifest as the single-device path.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.forest.distributed import make_distributed_fit
+
+    # keep memmap-style inputs lazy: only per-shard chunks are ever copied
+    X_np = X if isinstance(X, np.ndarray) else np.asarray(X, np.float32)
+    n, p = X_np.shape
+    if y is None:
+        y = np.zeros((n,), np.int64)
+    classes, counts, mins, maxs = class_stats_streaming(X_np, y, row_chunk)
+    n_y = len(classes)
+    cid_full = np.searchsorted(classes, np.asarray(y)).astype(np.int32)
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if model_axis not in axis_sizes:
+        raise ValueError(f"mesh has no {model_axis!r} axis: "
+                         f"{mesh.axis_names}")
+    if data_axes is None:
+        data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    m_size = axis_sizes[model_axis]
+    d_size = int(np.prod([axis_sizes[a] for a in data_axes], dtype=np.int64))
+
+    # Deterministic shuffle so every row shard sees every class: the sketch
+    # quantiles gather the head of each shard, and a class-sorted input on a
+    # small mesh would starve some ensembles' sketches entirely.
+    perm = np.random.default_rng(seed).permutation(n)
+    n_pad = -(-n // d_size) * d_size       # rows padded to w=0 tail
+
+    def _rows(idx, fill, build):
+        """Materialise one device's row slice of a [n_pad, ...] array."""
+        sl = idx[0]
+        lo = sl.start or 0
+        hi = n_pad if sl.stop is None else sl.stop
+        take = perm[lo:min(hi, n)]
+        out = build(take)
+        if hi > n:                          # tail padding rows
+            pad_shape = (hi - max(lo, n),) + out.shape[1:]
+            out = np.concatenate([out, np.full(pad_shape, fill, out.dtype)])
+        return out
+
+    # host→device streaming: each callback touches only its shard's chunk of
+    # X (one advanced-index copy of n_pad/d_size rows), rescaled with that
+    # row's own per-class scaler
+    def x_cb(idx):
+        return _rows(idx, 0.0, lambda take: rescale(
+            np.asarray(X_np[take], np.float32), mins[cid_full[take]],
+            maxs[cid_full[take]]).astype(np.float32))
+
+    def w_cb(idx):
+        return _rows(idx, 0.0,
+                     lambda take: np.ones((len(take),), np.float32))
+
+    def c_cb(idx):
+        return _rows(idx, 0, lambda take: cid_full[take])
+
+    row_sh = NamedSharding(mesh, P(data_axes))
+    x0_sh = jax.make_array_from_callback((n_pad, p), row_sh, x_cb)
+    w_sh = jax.make_array_from_callback((n_pad,), row_sh, w_cb)
+    c_sh = jax.make_array_from_callback((n_pad,), row_sh, c_cb)
+
+    ts = np.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff,
+                                  fcfg.t_schedule))
+    root = jax.random.PRNGKey(seed)
+    grid = [(ti, yi) for ti in range(fcfg.n_t) for yi in range(n_y)]
+    bs = ensembles_per_batch or max(m_size, min(len(grid), 8))
+    if not ensembles_per_batch and resume and checkpoint_dir:
+        # elastic resume: the batch size is part of the checkpoint layout,
+        # so when the caller didn't pin one, inherit the manifest's rather
+        # than deriving a (possibly different) default from the new mesh
+        bs = _manifest_batch_size(checkpoint_dir) or bs
+    bs = -(-bs // m_size) * m_size          # model-axis divisibility
+    if resume and checkpoint_dir:
+        stale = _manifest_batch_size(checkpoint_dir)
+        if stale and stale != bs:
+            raise ValueError(
+                f"checkpoint at {checkpoint_dir} was written with "
+                f"ensembles_per_batch={stale} but this run resolves to "
+                f"{bs} (the {m_size}-wide model axis needs a multiple of "
+                f"{m_size}); resume with ensembles_per_batch={stale} on a "
+                "compatible mesh, or retrain with resume=False.")
+
+    fit = make_distributed_fit(mesh, fcfg, data_axes=data_axes,
+                               model_axis=model_axis)
+
+    def run_batch(chunk):
+        # pad the tail batch by repeating entries: one compiled program for
+        # every dispatch; the duplicates are sliced off before writing
+        full = chunk + [chunk[-1]] * (bs - len(chunk))
+        t_arr = jnp.asarray([ts[ti] for ti, _ in full], jnp.float32)
+        y_arr = jnp.asarray([yi for _, yi in full], jnp.int32)
+        keys = np.stack([np.stack([
+            np.asarray(jax.random.fold_in(root, (ti * n_y + yi) * 2),
+                       np.uint32),
+            np.asarray(jax.random.fold_in(root, (ti * n_y + yi) * 2 + 1),
+                       np.uint32)]) for ti, yi in full])
+        res = fit(x0_sh, w_sh, c_sh, t_arr, y_arr, jnp.asarray(keys))
+        # gather per-model-axis shards back to host, drop the pad entries
+        return {k: np.asarray(getattr(res, k))[:len(chunk)]
+                for k in RESULT_FIELDS}
+
+    fingerprint = _manifest_fingerprint(
+        fcfg, n_t=fcfg.n_t, n_y=n_y, batch_size=bs, n_rows=n, p=p,
+        trainer="sharded")
+    results = _run_grid_batches(run_batch, grid, bs,
+                                checkpoint_dir=checkpoint_dir, resume=resume,
+                                fingerprint=fingerprint)
+    return ForestArtifacts.from_grid_results(results, fcfg.n_t, n_y, mins,
+                                             maxs, classes, counts, fcfg)

@@ -41,7 +41,9 @@ def test_fwd_flops_match_hlo_dense():
 
     toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
     compiled = jax.jit(fwd).lower(params, toks).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    # fl.hlo_cost_analysis handles both the dict and list-of-dicts return
+    # shapes of compiled.cost_analysis() across jax versions
+    hlo_flops = fl.hlo_cost_analysis(compiled)["flops"]
     # correct for the layer scan (body counted once, trip count = n_layers)
     # by computing analytic per-layer + outside terms
     cost = fl.cell_cost(cfg, shape, chips=1, dp_size=1, tp_size=1)

@@ -62,7 +62,7 @@ def test_distributed_fit_8dev():
     out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                          text=True, timeout=600,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-3000:]
     payload = json.loads(out.stdout.strip().splitlines()[-1])
     assert payload["ok"]

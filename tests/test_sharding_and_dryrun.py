@@ -102,7 +102,8 @@ fn = jax.jit(train_step, in_shardings=(p_shard, opt_shard, b_shard))
 lowered = fn.lower(params_shape, opt_shape, specs)
 compiled = lowered.compile()
 mem = compiled.memory_analysis()
-cost = compiled.cost_analysis()
+from repro.analysis.flops import hlo_cost_analysis
+cost = hlo_cost_analysis(compiled)  # dict/list-of-dicts across jax versions
 
 from repro.launch.dryrun import collective_inventory
 inv = collective_inventory(compiled.as_text())
@@ -119,7 +120,10 @@ def test_dryrun_code_path_small_mesh():
     out = subprocess.run([sys.executable, "-c", _DRYRUN_SMALL],
                          capture_output=True, text=True, timeout=600,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              # keep libtpu from probing TPU metadata for
+                              # minutes in the scrubbed subprocess env
+                              "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-3000:]
     payload = json.loads(out.stdout.strip().splitlines()[-1])
     assert payload["ok"]
