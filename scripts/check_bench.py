@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: compare freshly emitted BENCH_*.json files
+against the committed trajectory and fail CI on big throughput regressions.
+
+Usage (as wired into scripts/ci_smoke.sh):
+
+  python scripts/check_bench.py --fresh "$bench_out" --baseline . \
+      [--tolerance 0.30] [--files BENCH_generation.json BENCH_training.json]
+
+Matching is schema-agnostic so the gate survives benchmark evolution:
+records inside each file are keyed by their identity fields (``config``,
+``devices``, ``mesh``), and every numeric metric whose name ends in
+``rows_per_sec`` (at any nesting depth, e.g.
+``pipeline_comparison.pipelined_rows_per_sec``) is compared. A fresh value
+below ``baseline * (1 - tolerance)`` is a regression; metrics or records
+present on only one side are reported but don't fail (a retuned benchmark
+should land together with its refreshed baseline). Error records on the
+baseline side are skipped; on the fresh side they fail the gate.
+
+The default 30% tolerance is deliberately loose: CI boxes are noisy and the
+committed trajectory may come from different hardware. Tighten with
+``--tolerance`` or the ``BENCH_TOLERANCE`` environment variable once the
+fleet is homogeneous.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_FILES = ("BENCH_generation.json", "BENCH_training.json")
+METRIC_SUFFIX = "rows_per_sec"
+IDENTITY_KEYS = ("config", "devices", "mesh")
+# Reference arms exist to be compared against, not to be our perf
+# trajectory: the generation bench's per-class dispatch loop is hundreds of
+# tiny sequential dispatches — pure Python/dispatch overhead, the most
+# load-sensitive number on a shared box (observed ±45% between adjacent CI
+# runs). Gating it makes the gate flap without guarding anything we ship.
+IGNORED_METRIC_SUBSTRINGS = ("per_class_loop",)
+
+
+def record_key(rec: dict) -> str:
+    """Stable identity of a benchmark record (which workload/device count)."""
+    ident = {k: rec.get(k) for k in IDENTITY_KEYS if k in rec}
+    return json.dumps(ident, sort_keys=True)
+
+
+def metrics(rec, prefix: str = "") -> dict:
+    """All ``*rows_per_sec`` numbers in a record, flattened by dotted path."""
+    out = {}
+    if isinstance(rec, dict):
+        for k, v in rec.items():
+            path = f"{prefix}{k}"
+            if isinstance(v, dict):
+                out.update(metrics(v, path + "."))
+            elif (isinstance(v, (int, float)) and not isinstance(v, bool)
+                  and k.endswith(METRIC_SUFFIX)
+                  and not any(s in path for s in IGNORED_METRIC_SUBSTRINGS)):
+                out[path] = float(v)
+    return out
+
+
+def load_records(path: str):
+    with open(path) as f:
+        return json.load(f).get("records", [])
+
+
+def check_file(fresh_path: str, base_path: str, tolerance: float):
+    """Returns (regressions, notes) for one benchmark file pair.
+
+    Fails closed: if record identities drifted so far that not a single
+    metric could be compared, that is itself a gate failure — an "ok" must
+    mean real numbers were actually checked, never that the comparison
+    quietly matched nothing.
+    """
+    regressions, notes = [], []
+    compared = 0
+    base = {record_key(r): r for r in load_records(base_path)
+            if not r.get("error")}
+    seen_keys = set()
+    for rec in load_records(fresh_path):
+        key = record_key(rec)
+        seen_keys.add(key)
+        if rec.get("error"):
+            regressions.append((key, "error", 0.0, 0.0,
+                                rec["error"][-200:]))
+            continue
+        base_rec = base.get(key)
+        if base_rec is None:
+            notes.append(f"  new record (no baseline): {key}")
+            continue
+        fresh_m, base_m = metrics(rec), metrics(base_rec)
+        for name, b in sorted(base_m.items()):
+            f = fresh_m.get(name)
+            if f is None:
+                notes.append(f"  metric dropped: {name} @ {key}")
+                continue
+            compared += 1
+            floor = b * (1.0 - tolerance)
+            if f < floor:
+                regressions.append((key, name, b, f, None))
+            elif f > b * (1.0 + tolerance):
+                notes.append(
+                    f"  improvement: {name} {b:.0f} -> {f:.0f} @ {key} "
+                    "(consider refreshing the committed baseline)")
+    for key in sorted(set(base) - seen_keys):
+        notes.append(f"  baseline record not measured this run: {key}")
+    if compared == 0 and base:
+        regressions.append((
+            "<file>", "no-overlap", 0.0, 0.0,
+            "no metric could be compared against the committed baseline "
+            "(record identities drifted?) — refresh the baseline together "
+            "with the benchmark change"))
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True,
+                    help="directory with freshly emitted BENCH_*.json")
+    ap.add_argument("--baseline", default=".",
+                    help="directory with the committed trajectory files")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", "0.30")),
+                    help="allowed fractional rows/sec drop (default 0.30)")
+    ap.add_argument("--files", nargs="*", default=list(DEFAULT_FILES))
+    args = ap.parse_args(argv)
+
+    failed = False
+    for name in args.files:
+        fresh_path = os.path.join(args.fresh, name)
+        base_path = os.path.join(args.baseline, name)
+        if not os.path.exists(fresh_path):
+            print(f"[check_bench] {name}: FAIL — fresh file missing "
+                  f"({fresh_path})")
+            failed = True
+            continue
+        if not os.path.exists(base_path):
+            print(f"[check_bench] {name}: no committed baseline, skipping")
+            continue
+        regressions, notes = check_file(fresh_path, base_path,
+                                        args.tolerance)
+        status = "FAIL" if regressions else "ok"
+        print(f"[check_bench] {name}: {status} "
+              f"(tolerance {args.tolerance:.0%})")
+        for key, metric, b, f, err in regressions:
+            if err is not None:
+                print(f"  ERROR record @ {key}: {err}")
+            else:
+                print(f"  REGRESSION {metric}: {b:.0f} -> {f:.0f} "
+                      f"({f / b - 1.0:+.0%}) @ {key}")
+        for line in notes:
+            print(line)
+        failed = failed or bool(regressions)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

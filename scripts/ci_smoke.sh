@@ -27,3 +27,8 @@ test -s "$bench_out/BENCH_generation.json" && echo "BENCH_generation.json writte
 echo "== training benchmark (emits BENCH_training.json) =="
 python benchmarks/run.py --only training --json-dir "$bench_out"
 test -s "$bench_out/BENCH_training.json" && echo "BENCH_training.json written"
+
+echo "== benchmark regression gate (vs committed trajectory) =="
+# >30% rows/sec drop vs the committed BENCH_*.json fails the build; tune
+# with BENCH_TOLERANCE (fraction, e.g. 0.5) on noisy hardware
+python scripts/check_bench.py --fresh "$bench_out" --baseline .

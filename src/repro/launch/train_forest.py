@@ -17,6 +17,12 @@ Training real data (X [n, p] float, optional y [n] labels, in an .npz):
 Environment knobs: ``REPRO_HIST_IMPL=pallas`` selects the Pallas histogram
 kernel on TPU (default ``xla``); ``--int8-codes`` stores bin codes at int8
 (4x HBM reduction at n_bins ≤ 127).
+
+The distributed fit loop runs double-buffered by default (prefetch thread
+for input build, writer thread for gather + checkpoint streaming — see
+``repro.tabgen.PipelineConfig``): tune with ``--prefetch-depth``, force
+synchronous writes with ``--sync-checkpoint``, or fall back to the serial
+PR-2 loop with ``--serial`` (bit-identical artifacts either way).
 """
 from __future__ import annotations
 
@@ -62,6 +68,17 @@ def main(argv=None):
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--ensembles-per-batch", type=int, default=0)
+    # pipeline knobs (distributed trainer only; see tabgen.PipelineConfig)
+    ap.add_argument("--serial", action="store_true",
+                    help="disable the double-buffered pipeline: serial "
+                         "per-batch build -> dispatch -> gather -> write")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="bounded-queue depth between the input-build, "
+                         "dispatch, and writer stages (1 = classic double "
+                         "buffering)")
+    ap.add_argument("--sync-checkpoint", action="store_true",
+                    help="gather + write batch_*.npz on the dispatch "
+                         "thread instead of the async writer thread")
     ap.add_argument("--out", default=None,
                     help="base path for the saved .npz/.json artifact pair")
     ap.add_argument("--seed", type=int, default=0)
@@ -84,7 +101,7 @@ def main(argv=None):
     import jax
 
     from repro.config import ForestConfig
-    from repro.tabgen import fit_artifacts
+    from repro.tabgen import PipelineConfig, fit_artifacts
 
     if args.demo or args.data is None:
         X, y = _demo_data(args.demo_rows, args.demo_cols, args.demo_classes,
@@ -105,18 +122,25 @@ def main(argv=None):
         early_stop_rounds=args.early_stop_rounds, int8_codes=args.int8_codes)
 
     mesh = parse_mesh(args.mesh)
+    pipeline = (None if args.serial else PipelineConfig(
+        prefetch_depth=args.prefetch_depth,
+        async_checkpoint=not args.sync_checkpoint))
     if mesh is None:
         print(f"trainer: single-device ({jax.devices()[0].platform})")
     else:
         shape = dict(zip(mesh.axis_names, mesh.devices.shape))
-        print(f"trainer: shard_map over {mesh.devices.size} devices {shape}")
+        mode = ("serial" if pipeline is None else
+                f"pipelined (prefetch_depth={pipeline.prefetch_depth}, "
+                f"async_checkpoint={pipeline.async_checkpoint})")
+        print(f"trainer: shard_map over {mesh.devices.size} devices "
+              f"{shape}, {mode}")
 
     t0 = time.time()
     art = fit_artifacts(X, y, fcfg, seed=args.seed,
                         checkpoint_dir=args.checkpoint_dir,
                         resume=args.resume,
                         ensembles_per_batch=args.ensembles_per_batch,
-                        mesh=mesh)
+                        mesh=mesh, pipeline=pipeline)
     wall = time.time() - t0
     n_ens = art.n_t * art.n_y
     # throughput over the work actually done: every ensemble trains on all

@@ -9,7 +9,9 @@ Layers, bottom-up:
   ``@register_sampler`` adds more without touching the trainer.
 * :mod:`repro.tabgen.fitting`    — :func:`fit_artifacts`; ``mesh=`` routes
   through the shard_map trainer (:mod:`repro.forest.distributed`) with
-  streamed row shards and the ensemble grid sharded on the model axis.
+  streamed row shards and the ensemble grid sharded on the model axis,
+  double-buffered by default (:class:`PipelineConfig`: prefetch thread for
+  input build, writer thread for gather + async checkpointing).
 * :mod:`repro.tabgen.sampling`   — :func:`sample`, one jitted class-vmapped
   device program per generate call.
 * :mod:`repro.tabgen.imputation` — :func:`impute`.
@@ -22,7 +24,7 @@ shim over these pieces.
 from repro.tabgen.artifacts import ForestArtifacts  # noqa: F401
 from repro.tabgen.facade import TabularGenerator  # noqa: F401
 from repro.tabgen.fitting import (  # noqa: F401
-    class_stats_streaming, fit_artifacts, prepare_classes)
+    PipelineConfig, class_stats_streaming, fit_artifacts, prepare_classes)
 from repro.tabgen.imputation import impute  # noqa: F401
 from repro.tabgen.samplers import (  # noqa: F401
     default_sampler, get_sampler, list_samplers, register_sampler)

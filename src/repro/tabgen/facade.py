@@ -43,17 +43,20 @@ class TabularGenerator:
 
     def fit(self, X, y=None, *, seed: int = 0,
             checkpoint_dir: Optional[str] = None, resume: bool = False,
-            ensembles_per_batch: int = 0, mesh=None) -> "TabularGenerator":
+            ensembles_per_batch: int = 0, mesh=None,
+            pipeline="auto") -> "TabularGenerator":
         """``mesh`` routes training through the shard_map trainer: a
         :class:`jax.sharding.Mesh`, ``"auto"`` (one mesh over every visible
-        device), or ``None`` for the single-device path."""
+        device), or ``None`` for the single-device path. ``pipeline``
+        (``"auto"`` | :class:`~repro.tabgen.fitting.PipelineConfig` |
+        ``None``) picks the double-buffered vs serial distributed loop."""
         if self.schema is not None:
             self.schema.fit(X)
             X = self.schema.encode(X)
         self.artifacts = fit_artifacts(
             X, y, self.fcfg, seed=seed, checkpoint_dir=checkpoint_dir,
             resume=resume, ensembles_per_batch=ensembles_per_batch,
-            mesh=mesh)
+            mesh=mesh, pipeline=pipeline)
         return self
 
     def generate(self, n: int, *, sampler: Optional[str] = None,

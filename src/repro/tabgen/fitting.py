@@ -27,12 +27,25 @@ conditioning (no padded per-class blocks), the (timestep, class) ensemble
 grid sharded over the model axis, and host→device streaming of row chunks so
 X never has to fit on a single device. ``mesh="auto"`` builds one from
 ``jax.devices()``; ``mesh=None`` keeps the single-device path.
+
+Pipelining (PR 3): the distributed fit loop is a staged producer/consumer
+pipeline — a prefetch thread builds batch ``b+1``'s host-side inputs (the
+sharded row arrays on first use, per-batch timesteps/classes/PRNG keys)
+while batch ``b`` runs on the devices, the main thread only dispatches, and
+a writer thread does the deferred ``jax.block_until_ready`` bookkeeping:
+gathering each ``BoostResult`` and streaming ``batch_*.npz`` checkpoints +
+manifest updates off the critical path. :class:`PipelineConfig` carries the
+knobs (prefetch depth, async checkpointing); ``pipeline=None`` falls back to
+the PR-2 serial loop, and both paths build bit-identical batches.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import queue
+import threading
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -41,10 +54,11 @@ import numpy as np
 
 from repro.config import ForestConfig
 from repro.core import interpolants as itp
-from repro.forest.binning import edges_with_sentinel, transform
+from repro.forest.binning import edges_with_sentinel, pack_codes, transform
 from repro.forest.boosting import fit_ensemble
 from repro.tabgen.artifacts import (RESULT_FIELDS, ForestArtifacts,
                                     rescale)
+from repro.train import checkpoint as _ckpt
 
 
 def weighted_edges(x, w, n_bins: int):
@@ -159,43 +173,205 @@ def _run_grid_batches(run_batch, grid, bs: int, *,
 
     ``run_batch(chunk)`` trains ``chunk`` (a list of (ti, yi)) and returns
     ``{field: np.ndarray}`` with leading dim ``len(chunk)``. Shared by the
-    single-device and sharded trainers, so both get the same Issue-3
-    streaming checkpoints and the same manifest safety.
+    single-device and serial sharded trainers, so both get the same Issue-3
+    streaming checkpoints and the same manifest safety (the pipelined
+    driver below shares the :class:`~repro.train.checkpoint.GridManifest`
+    too, so the three paths are resume-compatible).
     """
-    manifest_path = (os.path.join(checkpoint_dir, "manifest.json")
-                     if checkpoint_dir else None)
-    done = set()
-    if resume and manifest_path and os.path.exists(manifest_path):
-        with open(manifest_path) as f:
-            manifest = json.load(f)
-        stale = manifest.get("fingerprint")
-        if stale != fingerprint:
-            diff = sorted(k for k in fingerprint
-                          if (stale or {}).get(k) != fingerprint[k])
-            raise ValueError(
-                f"checkpoint at {checkpoint_dir} was written under a "
-                f"different run configuration (mismatched: {diff}); "
-                "resuming would mix stale batch_*.npz files with new ones. "
-                "Pass resume=False (or a fresh checkpoint_dir) to retrain.")
-        done = set(tuple(e) for e in manifest["batches"])
+    manifest = (_ckpt.GridManifest(checkpoint_dir, fingerprint)
+                if checkpoint_dir else None)
+    done = manifest.load_done(resume) if manifest else set()
 
     results = {}
     for b0 in range(0, len(grid), bs):
         chunk = grid[b0:b0 + bs]
         key_id = (b0, len(chunk))
         if key_id in done:
-            data = np.load(os.path.join(checkpoint_dir, f"batch_{b0}.npz"))
-            res_np = {k: data[k] for k in data.files}
+            res_np = _ckpt.read_batch_npz(checkpoint_dir, b0)
         else:
             res_np = run_batch(chunk)
-            if checkpoint_dir:   # Issue 3: stream to disk, checkpointed
-                os.makedirs(checkpoint_dir, exist_ok=True)
-                np.savez(os.path.join(checkpoint_dir, f"batch_{b0}.npz"),
-                         **res_np)
-                done.add(key_id)
-                with open(manifest_path, "w") as f:
-                    json.dump({"fingerprint": fingerprint,
-                               "batches": sorted(done)}, f)
+            if manifest:   # Issue 3: stream to disk, checkpointed
+                _ckpt.write_batch_npz(checkpoint_dir, b0, res_np)
+                manifest.mark_done(key_id)
+        for j, (ti, yi) in enumerate(chunk):
+            results[(ti, yi)] = {k: v[j] for k, v in res_np.items()}
+    return results
+
+
+# ---------------------------------------------------------------------------
+# pipelined (double-buffered) grid driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Knobs of the double-buffered distributed fit loop.
+
+    ``prefetch_depth`` bounds both inter-stage queues: the prefetch thread
+    may run at most this many batches of input-build ahead of the dispatch
+    loop (1 = classic double buffering), and at most this many dispatched
+    batches of device results may be in flight awaiting the writer — the
+    backpressure that keeps host memory bounded.
+
+    ``async_checkpoint`` moves the ``BoostResult`` gather and the
+    ``batch_*.npz`` / manifest writes onto the writer thread. Disable it to
+    get the PR-2 strictly-synchronous writes (inputs still prefetch) — e.g.
+    when the checkpoint filesystem misbehaves under concurrent fsyncs or
+    when debugging with deterministic thread interleavings.
+    """
+    prefetch_depth: int = 2
+    async_checkpoint: bool = True
+
+
+#: Wall/overlap accounting of the most recent pipelined fit in this process
+#: (written once, after the pipeline drains — read by bench_training to
+#: report overlap efficiency; not part of the stable API).
+LAST_PIPELINE_STATS: dict = {}
+
+_STOP = object()
+
+
+def _run_grid_batches_pipelined(dispatch, collect, grid, bs: int, *,
+                                checkpoint_dir: Optional[str], resume: bool,
+                                fingerprint: dict, prefetch,
+                                pcfg: PipelineConfig):
+    """Producer/consumer version of :func:`_run_grid_batches`.
+
+    Three stages over the same batch sequence, bit-identical results:
+
+    * prefetch thread — ``prefetch(chunk) -> inputs`` (host-only input
+      build; skipped for batches the manifest already has);
+    * main thread — ``dispatch(inputs) -> device result`` (asynchronous
+      under jit, so dispatching batch ``b+1`` does not wait for ``b``);
+    * writer thread — ``collect(result, n) -> {field: np}`` (the deferred
+      ``block_until_ready`` + device→host gather) followed by the durable
+      ``batch_*.npz`` write and manifest update.
+
+    Any stage failing sets a shared stop event, the queues drain, and the
+    first error re-raises on the caller's thread. The manifest is only ever
+    updated after its batch file is durably committed, so a crash between
+    writer flushes resumes from the last committed batch.
+    """
+    manifest = (_ckpt.GridManifest(checkpoint_dir, fingerprint)
+                if checkpoint_dir else None)
+    done = manifest.load_done(resume) if manifest else set()
+
+    batches = [(b0, grid[b0:b0 + bs]) for b0 in range(0, len(grid), bs)]
+    depth = max(1, pcfg.prefetch_depth)
+    in_q: queue.Queue = queue.Queue(maxsize=depth)
+    out_q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+    errors: list = []
+    batch_np: dict = {}
+    stats = {"writer_busy_s": 0.0, "prefetch_busy_s": 0.0,
+             "n_batches": len(batches), "n_cached": 0,
+             "prefetch_depth": depth,
+             "async_checkpoint": pcfg.async_checkpoint}
+
+    def _put(q, item):
+        """Bounded put that aborts when another stage failed."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _get(q):
+        while not stop.is_set():
+            try:
+                return q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+        return _STOP
+
+    def _fail(exc):
+        errors.append(exc)
+        stop.set()
+
+    def _producer():
+        try:
+            for b0, chunk in batches:
+                if (b0, len(chunk)) in done:
+                    item = (b0, chunk, None)     # cached: nothing to build
+                else:
+                    t0 = time.perf_counter()
+                    inputs = prefetch(chunk)
+                    stats["prefetch_busy_s"] += time.perf_counter() - t0
+                    item = (b0, chunk, inputs)
+                if not _put(in_q, item):
+                    return
+            _put(in_q, _STOP)
+        except Exception as exc:  # noqa: BLE001 — re-raised on main thread
+            _fail(exc)
+
+    def _finish(b0, chunk, res_dev):
+        """Writer-stage work: deferred sync + gather + durable commit."""
+        t0 = time.perf_counter()
+        res_np = collect(res_dev, len(chunk))
+        if manifest:
+            _ckpt.write_batch_npz(checkpoint_dir, b0, res_np)
+            manifest.mark_done((b0, len(chunk)))
+        batch_np[b0] = res_np
+        stats["writer_busy_s"] += time.perf_counter() - t0
+
+    def _writer():
+        try:
+            while True:
+                item = _get(out_q)
+                if item is _STOP:
+                    return
+                _finish(*item)
+        except Exception as exc:  # noqa: BLE001 — re-raised on main thread
+            _fail(exc)
+
+    wall0 = time.perf_counter()
+    threads = [threading.Thread(target=_producer, name="tabgen-prefetch",
+                                daemon=True)]
+    if pcfg.async_checkpoint:
+        threads.append(threading.Thread(target=_writer, name="tabgen-writer",
+                                        daemon=True))
+    for t in threads:
+        t.start()
+    completed = False
+    try:
+        while True:
+            item = _get(in_q)
+            if item is _STOP:
+                break
+            b0, chunk, inputs = item
+            if inputs is None:    # committed by a previous (or this) run
+                batch_np[b0] = _ckpt.read_batch_npz(checkpoint_dir, b0)
+                stats["n_cached"] += 1
+                continue
+            res_dev = dispatch(inputs)   # async: returns device futures
+            if pcfg.async_checkpoint:
+                if not _put(out_q, (b0, chunk, res_dev)):
+                    break
+            else:
+                _finish(b0, chunk, res_dev)
+        if pcfg.async_checkpoint and not stop.is_set():
+            _put(out_q, _STOP)
+        completed = True
+    except Exception as exc:  # noqa: BLE001 — unified error path
+        _fail(exc)
+    finally:
+        # BaseException (KeyboardInterrupt, GeneratorExit) skips the except
+        # above: stop the stages here so the joins below can't hang and no
+        # polling daemon thread outlives the fit pinning the row shards
+        if not completed and not stop.is_set():
+            stop.set()
+        for t in threads:
+            t.join()
+    if errors:
+        raise errors[0]
+    stats["wall_s"] = time.perf_counter() - wall0
+    LAST_PIPELINE_STATS.clear()
+    LAST_PIPELINE_STATS.update(stats)
+
+    results = {}
+    for b0, chunk in batches:
+        res_np = batch_np[b0]
         for j, (ti, yi) in enumerate(chunk):
             results[(ti, yi)] = {k: v[j] for k, v in res_np.items()}
     return results
@@ -209,8 +385,8 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
                   seed: int = 0, checkpoint_dir: Optional[str] = None,
                   resume: bool = False, ensembles_per_batch: int = 0,
                   mesh=None, data_axes: Optional[Tuple[str, ...]] = None,
-                  model_axis: str = "model",
-                  row_chunk: int = 65536) -> ForestArtifacts:
+                  model_axis: str = "model", row_chunk: int = 65536,
+                  pipeline="auto") -> ForestArtifacts:
     """Train all (timestep, class) ensembles; returns portable artifacts.
 
     One jitted+vmapped fit program trains ``ensembles_per_batch`` ensembles
@@ -223,6 +399,15 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
     ``model_axis``; the string ``"auto"`` builds a mesh from every visible
     device (``repro.launch.mesh.auto_forest_mesh``) and falls back to the
     single-device path when there is only one.
+
+    ``pipeline`` applies to the sharded trainer: ``"auto"`` (default) runs
+    the double-buffered pipeline with :class:`PipelineConfig` defaults, an
+    explicit :class:`PipelineConfig` pins its knobs, and ``None`` keeps the
+    serial PR-2 loop. Both produce bit-identical artifacts for a fixed seed
+    and share one manifest format, so a serial checkpoint resumes under the
+    pipeline (and vice versa) — the execution style, like the mesh shape,
+    is deliberately not fingerprinted. The single-device trainer ignores
+    ``pipeline`` (its batches have no host/device overlap to hide).
     """
     if isinstance(mesh, str):
         if mesh != "auto":
@@ -230,11 +415,19 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
                              "'auto'")
         from repro.launch.mesh import auto_forest_mesh
         mesh = auto_forest_mesh()
+    # validate on every path: a malformed pipeline knob should fail loudly
+    # on a single-device box too, not first on the production mesh
+    if pipeline == "auto":
+        pipeline = PipelineConfig()
+    elif not (pipeline is None or isinstance(pipeline, PipelineConfig)):
+        raise ValueError(f"pipeline={pipeline!r}: expected 'auto', "
+                         "None, or a PipelineConfig")
     if mesh is not None:
         return _fit_artifacts_sharded(
             X, y, fcfg, mesh, seed=seed, checkpoint_dir=checkpoint_dir,
             resume=resume, ensembles_per_batch=ensembles_per_batch,
-            data_axes=data_axes, model_axis=model_axis, row_chunk=row_chunk)
+            data_axes=data_axes, model_axis=model_axis, row_chunk=row_chunk,
+            pipeline=pipeline)
 
     Xc, Wc, classes, counts, mins, maxs = prepare_classes(X, y)
     n_y, n_max, p = Xc.shape
@@ -260,6 +453,9 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
         _, xtv, tgtv = itp.sample_bridge(k_va, x0d, fcfg.method, t,
                                          fcfg.sigma)
         codes_v = transform(xtv, edges)
+        if fcfg.int8_codes:   # QuantileDMatrix-style narrow storage
+            codes = pack_codes(codes, fcfg.n_bins)
+            codes_v = pack_codes(codes_v, fcfg.n_bins)
         res = fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
                            codes_v, tgtv, wd, fcfg)
         return res
@@ -294,21 +490,29 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
                            checkpoint_dir: Optional[str], resume: bool,
                            ensembles_per_batch: int,
                            data_axes: Optional[Tuple[str, ...]],
-                           model_axis: str,
-                           row_chunk: int) -> ForestArtifacts:
+                           model_axis: str, row_chunk: int,
+                           pipeline: Optional[PipelineConfig]
+                           ) -> ForestArtifacts:
     """shard_map training from host data to :class:`ForestArtifacts`.
 
     Rows (rescaled per class, weight-masked class conditioning — no padded
     [n_y, n_max, p] blocks) are sharded over the data axes and streamed to
-    the devices chunk by chunk via ``make_array_from_callback``: each device
-    uploads only its own row slice, so X never has to fit on one device.
-    The (timestep, class) grid is sharded over the model axis in batches of
+    the devices chunk by chunk via ``build_row_shards``: each device uploads
+    only its own row slice, so X never has to fit on one device. The
+    (timestep, class) grid is sharded over the model axis in batches of
     ``ensembles_per_batch`` (rounded up to the model-axis size), reusing the
     same checkpoint/resume manifest as the single-device path.
-    """
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.forest.distributed import make_distributed_fit
+    With a :class:`PipelineConfig` the batch loop runs double-buffered: the
+    input build (row-shard upload on first use + per-batch keys) happens on
+    a prefetch thread while the previous batch executes, and the gather +
+    checkpoint writes happen on a writer thread; ``pipeline=None`` is the
+    serial loop. Batches are bit-identical either way.
+    """
+    from repro.forest.distributed import (build_batch_inputs,
+                                          build_grid_key_table,
+                                          build_row_shards,
+                                          make_distributed_fit)
 
     # keep memmap-style inputs lazy: only per-shard chunks are ever copied
     X_np = X if isinstance(X, np.ndarray) else np.asarray(X, np.float32)
@@ -325,46 +529,25 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
                          f"{mesh.axis_names}")
     if data_axes is None:
         data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    data_axes = tuple(data_axes)   # hashable for the trainer cache
     m_size = axis_sizes[model_axis]
-    d_size = int(np.prod([axis_sizes[a] for a in data_axes], dtype=np.int64))
 
     # Deterministic shuffle so every row shard sees every class: the sketch
     # quantiles gather the head of each shard, and a class-sorted input on a
     # small mesh would starve some ensembles' sketches entirely.
     perm = np.random.default_rng(seed).permutation(n)
-    n_pad = -(-n // d_size) * d_size       # rows padded to w=0 tail
 
-    def _rows(idx, fill, build):
-        """Materialise one device's row slice of a [n_pad, ...] array."""
-        sl = idx[0]
-        lo = sl.start or 0
-        hi = n_pad if sl.stop is None else sl.stop
-        take = perm[lo:min(hi, n)]
-        out = build(take)
-        if hi > n:                          # tail padding rows
-            pad_shape = (hi - max(lo, n),) + out.shape[1:]
-            out = np.concatenate([out, np.full(pad_shape, fill, out.dtype)])
-        return out
+    # row-shard build is deferred into the input-build stage: the pipelined
+    # driver runs it on the prefetch thread (overlapping the host→device
+    # upload with dispatch-side work), and an all-cached resume never pays
+    # for it at all
+    row_state: dict = {}
 
-    # host→device streaming: each callback touches only its shard's chunk of
-    # X (one advanced-index copy of n_pad/d_size rows), rescaled with that
-    # row's own per-class scaler
-    def x_cb(idx):
-        return _rows(idx, 0.0, lambda take: rescale(
-            np.asarray(X_np[take], np.float32), mins[cid_full[take]],
-            maxs[cid_full[take]]).astype(np.float32))
-
-    def w_cb(idx):
-        return _rows(idx, 0.0,
-                     lambda take: np.ones((len(take),), np.float32))
-
-    def c_cb(idx):
-        return _rows(idx, 0, lambda take: cid_full[take])
-
-    row_sh = NamedSharding(mesh, P(data_axes))
-    x0_sh = jax.make_array_from_callback((n_pad, p), row_sh, x_cb)
-    w_sh = jax.make_array_from_callback((n_pad,), row_sh, w_cb)
-    c_sh = jax.make_array_from_callback((n_pad,), row_sh, c_cb)
+    def rows():
+        if "arrs" not in row_state:
+            row_state["arrs"] = build_row_shards(
+                mesh, X_np, cid_full, mins, maxs, perm, data_axes)
+        return row_state["arrs"]
 
     ts = np.asarray(itp.timesteps(fcfg.method, fcfg.n_t, fcfg.eps_diff,
                                   fcfg.t_schedule))
@@ -390,27 +573,57 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
     fit = make_distributed_fit(mesh, fcfg, data_axes=data_axes,
                                model_axis=model_axis)
 
-    def run_batch(chunk):
+    def pad(chunk):
         # pad the tail batch by repeating entries: one compiled program for
         # every dispatch; the duplicates are sliced off before writing
-        full = chunk + [chunk[-1]] * (bs - len(chunk))
-        t_arr = jnp.asarray([ts[ti] for ti, _ in full], jnp.float32)
-        y_arr = jnp.asarray([yi for _, yi in full], jnp.int32)
-        keys = np.stack([np.stack([
-            np.asarray(jax.random.fold_in(root, (ti * n_y + yi) * 2),
-                       np.uint32),
-            np.asarray(jax.random.fold_in(root, (ti * n_y + yi) * 2 + 1),
-                       np.uint32)]) for ti, yi in full])
-        res = fit(x0_sh, w_sh, c_sh, t_arr, y_arr, jnp.asarray(keys))
-        # gather per-model-axis shards back to host, drop the pad entries
-        return {k: np.asarray(getattr(res, k))[:len(chunk)]
-                for k in RESULT_FIELDS}
+        return chunk + [chunk[-1]] * (bs - len(chunk))
 
     fingerprint = _manifest_fingerprint(
         fcfg, n_t=fcfg.n_t, n_y=n_y, batch_size=bs, n_rows=n, p=p,
         trainer="sharded")
-    results = _run_grid_batches(run_batch, grid, bs,
-                                checkpoint_dir=checkpoint_dir, resume=resume,
-                                fingerprint=fingerprint)
+
+    # one vectorized dispatch for every ensemble's PRNG keys (devices are
+    # idle here; values bit-identical to the per-batch fold_in pairs) —
+    # both loops slice plain numpy thereafter, and the pipeline's prefetch
+    # thread never contends with in-flight batches for device queues
+    key_table = build_grid_key_table(root, fcfg.n_t * n_y)
+
+    if pipeline is None:
+        def run_batch(chunk):
+            t_np, y_np, keys = build_batch_inputs(pad(chunk), ts, n_y, root,
+                                                  key_table)
+            x0_sh, w_sh, c_sh = rows()
+            res = fit(x0_sh, w_sh, c_sh, jnp.asarray(t_np),
+                      jnp.asarray(y_np), jnp.asarray(keys))
+            # gather per-model-axis shards back to host, drop pad entries
+            return {k: np.asarray(getattr(res, k))[:len(chunk)]
+                    for k in RESULT_FIELDS}
+
+        results = _run_grid_batches(run_batch, grid, bs,
+                                    checkpoint_dir=checkpoint_dir,
+                                    resume=resume, fingerprint=fingerprint)
+    else:
+        def prefetch(chunk):
+            # input-build stage: row shards (once) + this batch's grid cells
+            return rows() + build_batch_inputs(pad(chunk), ts, n_y, root,
+                                               key_table)
+
+        def dispatch(inputs):
+            x0_sh, w_sh, c_sh, t_np, y_np, keys = inputs
+            return fit(x0_sh, w_sh, c_sh, jnp.asarray(t_np),
+                       jnp.asarray(y_np), jnp.asarray(keys))
+
+        def collect(res, n_real):
+            # deferred bookkeeping: one explicit sync for the whole batch,
+            # then per-model-axis shards gather back to host; pad entries
+            # are sliced off before the batch is written
+            res = jax.block_until_ready(res)
+            return {k: np.asarray(getattr(res, k))[:n_real]
+                    for k in RESULT_FIELDS}
+
+        results = _run_grid_batches_pipelined(
+            dispatch, collect, grid, bs, checkpoint_dir=checkpoint_dir,
+            resume=resume, fingerprint=fingerprint, prefetch=prefetch,
+            pcfg=pipeline)
     return ForestArtifacts.from_grid_results(results, fcfg.n_t, n_y, mins,
                                              maxs, classes, counts, fcfg)

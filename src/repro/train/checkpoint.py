@@ -5,6 +5,14 @@ Layout:
   <dir>/step_<N>/arrays.npz      flattened pytree leaves
   <dir>/step_<N>/treedef.json    structure + shapes + dtypes (integrity check)
   <dir>/step_<N>/COMMITTED       written last -> crash-safe commit marker
+
+Besides the step-numbered pytree checkpoints, this module owns the
+batch-grid manifest used by the forest trainers (``batch_<b0>.npz`` files +
+``manifest.json``): :class:`GridManifest` is thread-safe and every update is
+write-tmp-then-``os.replace`` with an fsync, so the pipelined trainer's
+writer thread can flush batches while the main thread keeps dispatching,
+and a crash between flushes always leaves a consistent (if slightly stale)
+manifest that a resume can trust.
 """
 from __future__ import annotations
 
@@ -12,6 +20,7 @@ import json
 import os
 import shutil
 import tempfile
+import threading
 from pathlib import Path
 from typing import Any, Optional, Tuple
 
@@ -89,3 +98,97 @@ def reshard(tree, mesh, specs):
     def put(x, spec):
         return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
     return jax.tree_util.tree_map(put, tree, specs)
+
+
+# ---------------------------------------------------------------------------
+# batch-grid manifest (forest trainers: Issue-3 streaming checkpoints)
+# ---------------------------------------------------------------------------
+
+def _fsync_replace(tmp: str, final: str) -> None:
+    """``os.replace`` with the data already on disk: fsync the temp file,
+    rename, then fsync the directory entry. A crash at any point leaves
+    either the old complete file or the new complete file — never a
+    truncated one the manifest could be tricked into trusting."""
+    fd = os.open(tmp, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    os.replace(tmp, final)
+    dfd = os.open(os.path.dirname(final) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
+def write_batch_npz(directory: str, b0: int, arrays: dict) -> str:
+    """Atomically write one trained ensemble batch (``batch_<b0>.npz``)."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"batch_{b0}.npz")
+    tmp = os.path.join(directory, f".tmp_batch_{b0}.npz")
+    np.savez(tmp, **arrays)
+    _fsync_replace(tmp, final)
+    return final
+
+
+def read_batch_npz(directory: str, b0: int) -> dict:
+    """Load one committed ensemble batch back as ``{field: np.ndarray}``."""
+    with np.load(os.path.join(directory, f"batch_{b0}.npz")) as data:
+        return {k: data[k] for k in data.files}
+
+
+class GridManifest:
+    """Which ensemble batches of a (timestep, class) grid are complete.
+
+    The manifest pins the full run fingerprint (config, grid layout, batch
+    size, data shape — see ``_manifest_fingerprint`` in
+    :mod:`repro.tabgen.fitting`) and the set of committed ``(b0, len)``
+    batch keys. :meth:`load_done` refuses to resume under a mismatched
+    fingerprint — the PR-2 safety that keeps stale ``batch_*.npz`` files
+    from silently mixing with fresh ones.
+
+    Async-safe by construction: :meth:`mark_done` may be called from the
+    pipelined trainer's writer thread while the main thread dispatches later
+    batches (or, in principle, from several writers completing out of
+    order). A lock serialises updates, each update rewrites the whole
+    manifest to a temp file and ``os.replace``s it with fsyncs, and a batch
+    is only ever marked done *after* its ``batch_*.npz`` is durably
+    committed — so every state a crash can expose resumes correctly.
+    """
+
+    def __init__(self, directory: str, fingerprint: dict):
+        self.directory = directory
+        self.path = os.path.join(directory, "manifest.json")
+        self.fingerprint = fingerprint
+        self._lock = threading.Lock()
+        self._done: set = set()
+
+    def load_done(self, resume: bool) -> set:
+        """The committed batch keys; refuses mismatched-fingerprint resume."""
+        if resume and os.path.exists(self.path):
+            with open(self.path) as f:
+                manifest = json.load(f)
+            stale = manifest.get("fingerprint")
+            if stale != self.fingerprint:
+                diff = sorted(k for k in self.fingerprint
+                              if (stale or {}).get(k) != self.fingerprint[k])
+                raise ValueError(
+                    f"checkpoint at {self.directory} was written under a "
+                    f"different run configuration (mismatched: {diff}); "
+                    "resuming would mix stale batch_*.npz files with new "
+                    "ones. Pass resume=False (or a fresh checkpoint_dir) "
+                    "to retrain.")
+            self._done = set(tuple(e) for e in manifest["batches"])
+        return set(self._done)
+
+    def mark_done(self, key: Tuple[int, int]) -> None:
+        """Durably record ``key = (b0, n_ensembles)`` as committed."""
+        with self._lock:
+            self._done.add(key)
+            os.makedirs(self.directory, exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"fingerprint": self.fingerprint,
+                           "batches": sorted(self._done)}, f)
+            _fsync_replace(tmp, self.path)

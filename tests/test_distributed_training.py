@@ -147,14 +147,30 @@ art_el = fit_artifacts(X, y, fcfg, seed=0, mesh=mesh24,
                        checkpoint_dir=ck_full, resume=True)
 report["elastic_equal"] = bool(
     np.array_equal(np.asarray(art_full.leaf), np.asarray(art_el.leaf)))
+
+# pipelined vs serial on the 4x2 mesh: the double-buffered loop must be
+# bit-exact against the serial PR-2 loop for the same seed and batch size
+from repro.tabgen import PipelineConfig
+art_ser = fit_artifacts(X, y, fcfg, seed=0, mesh=meshes["4x2"],
+                        ensembles_per_batch=4, pipeline=None)
+art_pipe = fit_artifacts(X, y, fcfg, seed=0, mesh=meshes["4x2"],
+                         ensembles_per_batch=4,
+                         pipeline=PipelineConfig(prefetch_depth=2))
+report["pipe_bitexact"] = all(
+    np.array_equal(np.asarray(getattr(art_ser, f)),
+                   np.asarray(getattr(art_pipe, f)))
+    for f in ("feat", "thr_val", "leaf", "best_round", "rounds_run",
+              "val_curve"))
 report["ok"] = True
 print(json.dumps(report))
 """
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_sharded_trainer_parity_and_resume_8dev():
     out = subprocess.run([sys.executable, "-c", _PARITY],
-                         capture_output=True, text=True, timeout=600,
+                         capture_output=True, text=True, timeout=900,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                               "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert out.returncode == 0, out.stderr[-3000:]
@@ -170,3 +186,4 @@ def test_sharded_trainer_parity_and_resume_8dev():
         assert r[k] < 0.35, r
     assert r["resume_equal"], r
     assert r["elastic_equal"], r
+    assert r["pipe_bitexact"], r

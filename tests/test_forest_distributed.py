@@ -4,6 +4,8 @@ import json
 import subprocess
 import sys
 
+import pytest
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -58,6 +60,8 @@ print(json.dumps({"ok": True, "err": float(err)}))
 """
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_distributed_fit_8dev():
     out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                          text=True, timeout=600,

@@ -64,6 +64,8 @@ print(json.dumps({"ok": True}))
 """
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_elastic_remesh_restore():
     out = subprocess.run([sys.executable, "-c", _ELASTIC],
                          capture_output=True, text=True, timeout=600,
