@@ -37,7 +37,10 @@ IDENTITY_KEYS = ("config", "devices", "mesh")
 # tiny sequential dispatches — pure Python/dispatch overhead, the most
 # load-sensitive number on a shared box (observed ±45% between adjacent CI
 # runs). Gating it makes the gate flap without guarding anything we ship.
-IGNORED_METRIC_SUBSTRINGS = ("per_class_loop",)
+# ``pallas_interpret`` is the CPU op-by-op emulation of the TPU kernel — a
+# correctness arm recorded for the trajectory, not shipped perf (the real
+# kernel number comes from a TPU run of the same bench).
+IGNORED_METRIC_SUBSTRINGS = ("per_class_loop", "pallas_interpret")
 
 
 def record_key(rec: dict) -> str:
@@ -66,13 +69,18 @@ def load_records(path: str):
         return json.load(f).get("records", [])
 
 
-def check_file(fresh_path: str, base_path: str, tolerance: float):
+def check_file(fresh_path: str, base_path: str, tolerance: float,
+               allow_no_overlap: bool = False):
     """Returns (regressions, notes) for one benchmark file pair.
 
     Fails closed: if record identities drifted so far that not a single
     metric could be compared, that is itself a gate failure — an "ok" must
     mean real numbers were actually checked, never that the comparison
-    quietly matched nothing.
+    quietly matched nothing. ``allow_no_overlap`` downgrades that case to a
+    note: the nightly ``--full`` lane measures paper-sized workloads whose
+    identities deliberately differ from the committed quick-size trajectory,
+    so until a full-size baseline is committed it compares what it can and
+    still trips on error records.
     """
     regressions, notes = [], []
     compared = 0
@@ -107,11 +115,16 @@ def check_file(fresh_path: str, base_path: str, tolerance: float):
     for key in sorted(set(base) - seen_keys):
         notes.append(f"  baseline record not measured this run: {key}")
     if compared == 0 and base:
-        regressions.append((
-            "<file>", "no-overlap", 0.0, 0.0,
-            "no metric could be compared against the committed baseline "
-            "(record identities drifted?) — refresh the baseline together "
-            "with the benchmark change"))
+        if allow_no_overlap:
+            notes.append(
+                "  no metric overlapped the committed baseline (different "
+                "workload sizes); tolerated by --allow-no-overlap")
+        else:
+            regressions.append((
+                "<file>", "no-overlap", 0.0, 0.0,
+                "no metric could be compared against the committed baseline "
+                "(record identities drifted?) — refresh the baseline together "
+                "with the benchmark change"))
     return regressions, notes
 
 
@@ -125,6 +138,10 @@ def main(argv=None) -> int:
                     default=float(os.environ.get("BENCH_TOLERANCE", "0.30")),
                     help="allowed fractional rows/sec drop (default 0.30)")
     ap.add_argument("--files", nargs="*", default=list(DEFAULT_FILES))
+    ap.add_argument("--allow-no-overlap", action="store_true",
+                    help="tolerate zero comparable metrics (nightly --full "
+                         "lane vs quick-size committed baselines); error "
+                         "records still fail")
     args = ap.parse_args(argv)
 
     failed = False
@@ -140,7 +157,8 @@ def main(argv=None) -> int:
             print(f"[check_bench] {name}: no committed baseline, skipping")
             continue
         regressions, notes = check_file(fresh_path, base_path,
-                                        args.tolerance)
+                                        args.tolerance,
+                                        args.allow_no_overlap)
         status = "FAIL" if regressions else "ok"
         print(f"[check_bench] {name}: {status} "
               f"(tolerance {args.tolerance:.0%})")

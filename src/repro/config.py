@@ -152,4 +152,8 @@ class ForestConfig:
     split_reduce: str = "allreduce"  # | "reduce_scatter" (feature-sharded)
     hist_bf16: bool = False     # bf16 histogram collective payload
     int8_codes: bool = False    # store bin codes at int8 (4x HBM reduction)
+    predict_impl: Optional[str] = None  # tree-predict backend for generation:
+                                 # "xla" | "pallas" | "pallas_interpret";
+                                 # None defers to REPRO_TREE_PREDICT_IMPL
+                                 # (resolved per sample/impute call)
     seed: int = 0

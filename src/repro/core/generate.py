@@ -16,7 +16,7 @@ from repro.forest.packed import PackedForest, predict_forest
 
 
 def flow_euler(x1, forests_stacked: PackedForest, depth: int, n_t: int,
-               ts=None):
+               ts=None, impl=None):
     """Integrate dx = v dt from t=1 to t=0 with the learned vector field.
 
     x1: [n, p] noise. forests_stacked arrays have leading dim n_t (timestep
@@ -30,7 +30,7 @@ def flow_euler(x1, forests_stacked: PackedForest, depth: int, n_t: int,
     def step(x, inp):
         h, feat, thr, leaf = inp
         f = PackedForest(feat, thr, leaf, forests_stacked.multi_output)
-        v = predict_forest(x, f, depth)
+        v = predict_forest(x, f, depth, impl=impl)
         return x - h * v, None
 
     # iterate timesteps n_t-1 ... 1 (descending t)
@@ -43,7 +43,7 @@ def flow_euler(x1, forests_stacked: PackedForest, depth: int, n_t: int,
 
 
 def flow_heun(x1, forests_stacked: PackedForest, depth: int, n_t: int,
-              ts=None):
+              ts=None, impl=None):
     """Heun (explicit trapezoid) ODE integration of the learned flow.
 
     Second-order accurate in h: each interval evaluates the vector field at
@@ -68,8 +68,8 @@ def flow_heun(x1, forests_stacked: PackedForest, depth: int, n_t: int,
         # stack (instead of two shifted copies as scan xs) keeps device
         # memory at one forest stack, not three.
         h, i = inp
-        v1 = predict_forest(x, forest_at(i), depth)
-        v2 = predict_forest(x - h * v1, forest_at(i - 1), depth)
+        v1 = predict_forest(x, forest_at(i), depth, impl=impl)
+        v2 = predict_forest(x - h * v1, forest_at(i - 1), depth, impl=impl)
         return x - 0.5 * h * (v1 + v2), None
 
     idx = jnp.arange(n_t - 1, 0, -1)         # timesteps n_t-1 ... 1
@@ -78,7 +78,7 @@ def flow_heun(x1, forests_stacked: PackedForest, depth: int, n_t: int,
 
 
 def diffusion_ddim(x1, forests_stacked: PackedForest, depth: int, n_t: int,
-                   eps: float, clip: float = 1.5, ts=None):
+                   eps: float, clip: float = 1.5, ts=None, impl=None):
     """Deterministic DDIM / exponential-integrator sampling of the VP process.
 
     Unconditionally stable at coarse grids (the paper's Euler-Maruyama needs
@@ -95,7 +95,7 @@ def diffusion_ddim(x1, forests_stacked: PackedForest, depth: int, n_t: int,
     def step(x, inp):
         t_now, t_next, feat, thr, leaf = inp
         f = PackedForest(feat, thr, leaf, forests_stacked.multi_output)
-        score = predict_forest(x, f, depth)
+        score = predict_forest(x, f, depth, impl=impl)
         a_now, s_now = itp.vp_alpha_sigma(t_now)
         a_next, s_next = itp.vp_alpha_sigma(t_next)
         eps_hat = -s_now * score
@@ -112,12 +112,12 @@ def diffusion_ddim(x1, forests_stacked: PackedForest, depth: int, n_t: int,
     f = PackedForest(forests_stacked.feat[0], forests_stacked.thr_val[0],
                      forests_stacked.leaf[0], forests_stacked.multi_output)
     a, s = itp.vp_alpha_sigma(ts[-1])
-    score = predict_forest(x, f, depth)
+    score = predict_forest(x, f, depth, impl=impl)
     return (x + s ** 2 * score) / a
 
 
 def diffusion_em(x1, forests_stacked: PackedForest, depth: int, n_t: int,
-                 eps: float, key, ts=None):
+                 eps: float, key, ts=None, impl=None):
     """Reverse VP-SDE Euler-Maruyama from t=1 to t=eps using the score model."""
     if ts is None:
         ts = itp.timesteps("diffusion", n_t, eps)
@@ -128,7 +128,7 @@ def diffusion_em(x1, forests_stacked: PackedForest, depth: int, n_t: int,
         x, k = carry
         t, h, feat, thr, leaf = inp
         f = PackedForest(feat, thr, leaf, forests_stacked.multi_output)
-        score = predict_forest(x, f, depth)
+        score = predict_forest(x, f, depth, impl=impl)
         beta = itp.vp_beta(t)
         drift = -0.5 * beta * x - beta * score
         k, sub = jax.random.split(k)

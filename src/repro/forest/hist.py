@@ -11,27 +11,33 @@ XGBoost's Rabit allreduce-of-histograms, expressed as a JAX collective.
 """
 from __future__ import annotations
 
-import os
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-# 'xla' | 'pallas' | 'pallas_interpret' — TPU runs set REPRO_HIST_IMPL=pallas.
-_IMPL = os.environ.get("REPRO_HIST_IMPL", "xla")
+from repro.kernels.dispatch import resolve_impl
 
 
 def build_histogram(codes, node_id, g, w, n_nodes: int, n_bins: int,
-                    axis_names: Sequence[str] = ()) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                    axis_names: Sequence[str] = (),
+                    impl: Optional[str] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Accumulate per-(node, feature, bin) gradient sums and weights.
 
     codes: [n, p] int; node_id: [n] int32; g: [n, out] fp32; w: [n] fp32.
     Returns (sum_g [n_nodes, p, n_bins, out], count [n_nodes, p, n_bins]).
+
+    ``impl`` ('xla' | 'pallas' | 'pallas_interpret'; TPU runs set
+    REPRO_HIST_IMPL=pallas) is resolved per call — setting the env var after
+    import works, unlike the old module-level snapshot. Inside an
+    already-compiled trainer the choice is baked in at trace time.
     """
-    if _IMPL != "xla":
+    impl = resolve_impl(impl, env_var="REPRO_HIST_IMPL")
+    if impl != "xla":
         from repro.kernels.hist.hist_kernel import histogram_pallas
         sums, cnt = histogram_pallas(codes, node_id, g, w, n_nodes, n_bins,
-                                     interpret=(_IMPL == "pallas_interpret"))
+                                     interpret=(impl == "pallas_interpret"))
         for ax in axis_names:
             sums = jax.lax.psum(sums, ax)
             cnt = jax.lax.psum(cnt, ax)

@@ -1,0 +1,42 @@
+"""Per-call kernel-impl resolution, shared by every Pallas/XLA switch.
+
+One convention for picking an implementation (``hist``, ``tree_predict``, …):
+
+    impl = resolve_impl(call_arg, config_field, env_var="REPRO_<OP>_IMPL")
+
+The first non-empty candidate wins, then the environment variable, then the
+``xla`` default. Resolution happens at *call* time — the old module-level
+``_IMPL = os.environ.get(...)`` pattern froze the switch at import time, so
+setting the variable after the first import was silently ignored and tests
+could not toggle implementations.
+
+Note the env var is still read when the surrounding program *traces*: a
+jitted trainer compiled under one setting keeps its compiled choice until
+its cache key changes (callers that want a jit-visible switch thread the
+resolved impl through as a static argument, as ``repro.tabgen.sample``
+does).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+VALID_IMPLS = ("xla", "pallas", "pallas_interpret")
+
+
+def resolve_impl(*candidates: Optional[str], env_var: str,
+                 default: str = "xla") -> str:
+    """First non-empty candidate, else ``os.environ[env_var]``, else default.
+
+    Candidates are explicit call arguments and config fields, most specific
+    first; ``None`` (and ``""``) mean "not specified". The winning value is
+    validated against :data:`VALID_IMPLS` so a typo'd env var fails loudly at
+    the call that would have silently used the wrong path.
+    """
+    impl = next((c for c in candidates if c), None) \
+        or os.environ.get(env_var) or default
+    if impl not in VALID_IMPLS:
+        raise ValueError(
+            f"unknown kernel impl {impl!r} (via {env_var} or caller); "
+            f"expected one of {VALID_IMPLS}")
+    return impl

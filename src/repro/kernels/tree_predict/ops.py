@@ -1,18 +1,37 @@
-"""Jit'd dispatch wrapper for packed-forest inference."""
+"""Jit'd dispatch wrapper for packed-forest inference.
+
+``forest_predict`` is the one entry point every traversal goes through
+(:func:`repro.forest.packed.predict_forest` routes here, so samplers,
+imputation, and serving inherit whichever impl is selected). The impl is
+resolved per call — explicit argument first, then the
+``REPRO_TREE_PREDICT_IMPL`` environment variable, then ``xla`` — and passed
+to the jitted core as a static argument, so each impl compiles its own
+program and switching at runtime just selects a different cache entry.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels.dispatch import resolve_impl
 from repro.kernels.tree_predict.ref import forest_predict_ref
 from repro.kernels.tree_predict.tree_kernel import forest_predict_pallas
 
+ENV_VAR = "REPRO_TREE_PREDICT_IMPL"
+
 
 @functools.partial(jax.jit, static_argnames=("depth", "impl"))
-def forest_predict(x, feat, thr_val, leaf, depth: int, impl: str = "xla"):
-    """impl: 'xla' | 'pallas' | 'pallas_interpret'."""
+def _forest_predict(x, feat, thr_val, leaf, depth: int, impl: str):
     if impl == "xla":
         return forest_predict_ref(x, feat, thr_val, leaf, depth)
     return forest_predict_pallas(x, feat, thr_val, leaf, depth,
                                  interpret=(impl == "pallas_interpret"))
+
+
+def forest_predict(x, feat, thr_val, leaf, depth: int,
+                   impl: Optional[str] = None):
+    """impl: 'xla' | 'pallas' | 'pallas_interpret' (None -> env -> 'xla')."""
+    impl = resolve_impl(impl, env_var=ENV_VAR)
+    return _forest_predict(x, feat, thr_val, leaf, depth, impl=impl)

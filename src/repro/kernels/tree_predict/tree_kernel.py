@@ -53,15 +53,25 @@ def _predict_kernel(x_ref, feat_ref, thr_ref, leaf_ref, out_ref, *,
 
 def forest_predict_pallas(x, feat, thr_val, leaf, depth: int,
                           rows_block: int = 256, interpret: bool = False):
-    """Same contract as ref.forest_predict_ref."""
+    """Same contract as ref.forest_predict_ref — any row count works.
+
+    Rows are padded up to the next ``rows_block`` multiple before the call
+    and the padding is sliced off the output, so serving-path batch shapes
+    (odd buckets, oversize exact-size requests) never hit a grid-divisibility
+    assert. Padded rows traverse with x=0 — every value is finite (the +inf
+    sentinels are clipped inside the kernel), the garbage rows just get
+    dropped.
+    """
     n, p = x.shape
     n_trees, n_heap = feat.shape
     n_leaves, out = leaf.shape[1], leaf.shape[2]
     rows_block = min(rows_block, n)
-    assert n % rows_block == 0, (n, rows_block)
-    grid = (n // rows_block, n_trees)
+    n_pad = pl.cdiv(n, rows_block) * rows_block
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    grid = (n_pad // rows_block, n_trees)
     kernel = functools.partial(_predict_kernel, depth=depth)
-    return pl.pallas_call(
+    res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -71,7 +81,8 @@ def forest_predict_pallas(x, feat, thr_val, leaf, depth: int,
             pl.BlockSpec((1, n_leaves, out), lambda r, t: (t, 0, 0)),
         ],
         out_specs=pl.BlockSpec((rows_block, out), lambda r, t: (r, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, out), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, out), jnp.float32),
         interpret=interpret,
     )(x.astype(jnp.float32), feat.astype(jnp.int32),
       thr_val.astype(jnp.float32), leaf.astype(jnp.float32))
+    return res if n_pad == n else res[:n]

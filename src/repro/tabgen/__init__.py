@@ -13,7 +13,9 @@ Layers, bottom-up:
   double-buffered by default (:class:`PipelineConfig`: prefetch thread for
   input build, writer thread for gather + async checkpointing).
 * :mod:`repro.tabgen.sampling`   — :func:`sample`, one jitted class-vmapped
-  device program per generate call.
+  device program per generate call; ``mesh=`` shards it (classes on the
+  model axis, rows on the data axes) and ``impl=`` picks the tree-predict
+  backend (XLA reference vs the Pallas kernel), resolved per call.
 * :mod:`repro.tabgen.imputation` — :func:`impute`.
 * :mod:`repro.tabgen.facade`     — :class:`TabularGenerator`, the
   schema-aware fit/generate/impute/save/load front door.

@@ -34,6 +34,24 @@ from repro.forest.packed import PackedForest
 FORMAT_VERSION = 1
 
 
+def solve_axes(mesh, n_y: int, model_axis: str = "model"):
+    """(class-dim axis | None, row-dim axes tuple | None) — THE placement
+    policy shared by :meth:`ForestArtifacts.shard` and the sharded solve in
+    :mod:`repro.tabgen.sampling` (one source of truth, so pre-placed serving
+    arrays always match the solve's sharding constraints).
+
+    Classes go on the model axis only when they divide it evenly (a 3-class
+    model on a 2-wide model axis replicates classes instead of failing);
+    rows always shard over the remaining (data) axes — GSPMD handles uneven
+    row counts by padding internally.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = (model_axis if model_axis in sizes
+             and n_y % sizes[model_axis] == 0 else None)
+    rows = tuple(a for a in mesh.axis_names if a != model_axis) or None
+    return model, rows
+
+
 def scaler_span(mins, maxs):
     """``max - min`` with degenerate columns (max <= min) pinned to 1 — THE
     per-class scaler convention shared by fit, sample, and impute. Bool
@@ -116,6 +134,31 @@ class ForestArtifacts:
     def trees_at_best_iteration(self) -> np.ndarray:
         """Paper Fig. 3: trees kept per timestep (mean over y, sub)."""
         return np.mean(np.asarray(self.best_round) + 1, axis=(1, 2))
+
+    def shard(self, mesh, model_axis: str = "model") -> "ForestArtifacts":
+        """Device-place the arrays for mesh-sharded sampling.
+
+        The class dim goes over ``model_axis`` per :func:`solve_axes` (the
+        same policy the sharded solve constrains with), everything else is
+        replicated; rows are sharded inside the sampling program itself. A
+        serving host calls this once at load time so repeated
+        :func:`~repro.tabgen.sample` calls with the same mesh skip the
+        per-call reshard.
+        """
+        ax, _ = solve_axes(mesh, self.n_y, model_axis)
+
+        def put(arr, *spec):
+            sh = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(*spec))
+            return jax.device_put(arr, sh)
+
+        return dataclasses.replace(
+            self,
+            feat=put(self.feat, None, ax), thr_val=put(self.thr_val, None, ax),
+            leaf=put(self.leaf, None, ax), best_round=put(self.best_round, None, ax),
+            rounds_run=put(self.rounds_run, None, ax),
+            val_curve=put(self.val_curve, None, ax),
+            mins=put(self.mins, ax), maxs=put(self.maxs, ax))
 
     # -- construction -------------------------------------------------------
 

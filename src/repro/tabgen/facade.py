@@ -60,23 +60,27 @@ class TabularGenerator:
         return self
 
     def generate(self, n: int, *, sampler: Optional[str] = None,
-                 seed: int = 0, pad_to: Optional[int] = None):
+                 seed: int = 0, pad_to: Optional[int] = None, mesh=None,
+                 impl: Optional[str] = None):
+        """``mesh`` (``"auto"`` | Mesh | None) shards the solve across
+        devices; ``impl`` picks the tree-predict backend (xla | pallas |
+        pallas_interpret) — both forwarded to :func:`repro.tabgen.sample`."""
         assert self.artifacts is not None, "fit() or load() first"
         X, y = _sample(self.artifacts, n, sampler=sampler, seed=seed,
-                       pad_to=pad_to)
+                       pad_to=pad_to, mesh=mesh, impl=impl)
         if self.schema is not None:
             X = self.schema.decode(X)
         return X, y
 
     def impute(self, X_missing, y=None, *, seed: int = 0,
-               refine_rounds: int = 3):
+               refine_rounds: int = 3, impl: Optional[str] = None):
         assert self.artifacts is not None, "fit() or load() first"
         if self.schema is None:
             return _impute(self.artifacts, X_missing, y, seed=seed,
-                           refine_rounds=refine_rounds)
+                           refine_rounds=refine_rounds, impl=impl)
         Z = self.schema.encode_with_missing(X_missing)
         filled = _impute(self.artifacts, Z, y, seed=seed,
-                         refine_rounds=refine_rounds)
+                         refine_rounds=refine_rounds, impl=impl)
         out = self.schema.decode(filled)
         # observed raw cells are authoritative — only NaN cells get imputed
         X_missing = np.asarray(X_missing)

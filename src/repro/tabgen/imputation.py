@@ -22,13 +22,21 @@ import numpy as np
 
 from repro.core import interpolants as itp
 from repro.forest.packed import PackedForest, predict_forest
+from repro.kernels.dispatch import resolve_impl
+from repro.kernels.tree_predict.ops import ENV_VAR as _PREDICT_ENV
 from repro.tabgen.artifacts import ForestArtifacts, rescale, unscale
 
 
 def impute(artifacts: ForestArtifacts, X_missing, y=None, *, seed: int = 0,
-           refine_rounds: int = 3) -> np.ndarray:
-    """Fill NaNs in ``X_missing``; observed cells are returned untouched."""
+           refine_rounds: int = 3, impl: Optional[str] = None) -> np.ndarray:
+    """Fill NaNs in ``X_missing``; observed cells are returned untouched.
+
+    ``impl`` selects the tree-predict backend for every solver step of the
+    clamped solve (argument > ``ForestConfig.predict_impl`` > env > xla) —
+    the imputation loop inherits the kernel exactly like the samplers do.
+    """
     fcfg = artifacts.config
+    impl = resolve_impl(impl, fcfg.predict_impl, env_var=_PREDICT_ENV)
     X_missing = np.asarray(X_missing, np.float32)
     n, p = X_missing.shape
     if y is None:
@@ -81,11 +89,13 @@ def impute(artifacts: ForestArtifacts, X_missing, y=None, *, seed: int = 0,
                 if fcfg.method == "flow":
                     bridge = t * eps_fix + (1 - t) * obs_d
                     x = jnp.where(m, bridge, x)
-                    x = x - h_i * predict_forest(x, f, fcfg.max_depth)
+                    x = x - h_i * predict_forest(x, f, fcfg.max_depth,
+                                                 impl=impl)
                 else:
                     a, s_ = itp.vp_alpha_sigma(jnp.float32(t))
                     x = jnp.where(m, a * obs_d + s_ * eps_fix, x)
-                    score = predict_forest(x, f, fcfg.max_depth)
+                    score = predict_forest(x, f, fcfg.max_depth,
+                                           impl=impl)
                     t_next = float(ts[i - 1])
                     a2, s2 = itp.vp_alpha_sigma(jnp.float32(t_next))
                     eps_hat = -s_ * score

@@ -8,7 +8,11 @@ solvers are one decorated function away.
 
 Unified signature (extra knobs arrive as keywords and may be ignored):
 
-    fn(x1, forests, *, depth, n_t, ts, key, eps) -> x0
+    fn(x1, forests, *, depth, n_t, ts, key, eps, impl) -> x0
+
+``impl`` is the tree-predict backend (``xla`` | ``pallas`` |
+``pallas_interpret``) that :func:`repro.tabgen.sampling.sample` resolves
+per call; solvers just forward it to :func:`~repro.forest.packed.predict_forest`.
 
 ``forests`` is a :class:`PackedForest` whose arrays carry a leading
 ``[n_t]`` timestep axis; ``ts`` is the (possibly non-uniform) grid the
@@ -65,20 +69,20 @@ def default_sampler(method: str, diff_sampler: str = "ddim") -> str:
 # ---------------------------------------------------------------------------
 
 @register_sampler("euler", method="flow")
-def _euler(x1, forests, *, depth, n_t, ts, key=None, eps=0.0):
-    return G.flow_euler(x1, forests, depth, n_t, ts=ts)
+def _euler(x1, forests, *, depth, n_t, ts, key=None, eps=0.0, impl=None):
+    return G.flow_euler(x1, forests, depth, n_t, ts=ts, impl=impl)
 
 
 @register_sampler("heun", method="flow")
-def _heun(x1, forests, *, depth, n_t, ts, key=None, eps=0.0):
-    return G.flow_heun(x1, forests, depth, n_t, ts=ts)
+def _heun(x1, forests, *, depth, n_t, ts, key=None, eps=0.0, impl=None):
+    return G.flow_heun(x1, forests, depth, n_t, ts=ts, impl=impl)
 
 
 @register_sampler("ddim", method="diffusion")
-def _ddim(x1, forests, *, depth, n_t, ts, key=None, eps=1e-3):
-    return G.diffusion_ddim(x1, forests, depth, n_t, eps, ts=ts)
+def _ddim(x1, forests, *, depth, n_t, ts, key=None, eps=1e-3, impl=None):
+    return G.diffusion_ddim(x1, forests, depth, n_t, eps, ts=ts, impl=impl)
 
 
 @register_sampler("em", method="diffusion", stochastic=True)
-def _em(x1, forests, *, depth, n_t, ts, key, eps=1e-3):
-    return G.diffusion_em(x1, forests, depth, n_t, eps, key, ts=ts)
+def _em(x1, forests, *, depth, n_t, ts, key, eps=1e-3, impl=None):
+    return G.diffusion_em(x1, forests, depth, n_t, eps, key, ts=ts, impl=impl)

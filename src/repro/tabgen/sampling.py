@@ -12,6 +12,14 @@ the host afterwards.
 ``pad_to`` rounds the per-class row budget up to a fixed bucket so a serving
 host (:mod:`repro.launch.serve_forest`) can pre-compile one program per
 (sampler, bucket) and reuse it for every request size below the bucket.
+
+``mesh`` shards the solve the way ``fit_artifacts`` shards training: the
+class-vmapped axis over the ``model`` mesh axis, rows over the data axes
+(GSPMD sharding constraints inside the one jitted program — noise is drawn
+per (class, row) counter, so the sharded solve is value-identical to the
+single-device one). ``impl`` picks the tree-traversal backend and is
+resolved per call (argument > ``ForestConfig.predict_impl`` >
+``REPRO_TREE_PREDICT_IMPL`` > ``xla``).
 """
 from __future__ import annotations
 
@@ -21,10 +29,13 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core import interpolants as itp
 from repro.forest.packed import PackedForest
-from repro.tabgen.artifacts import ForestArtifacts, unscale
+from repro.kernels.dispatch import resolve_impl
+from repro.kernels.tree_predict.ops import ENV_VAR as _PREDICT_ENV
+from repro.tabgen.artifacts import ForestArtifacts, solve_axes, unscale
 from repro.tabgen.samplers import default_sampler, get_sampler
 
 
@@ -47,18 +58,51 @@ def sample_labels(counts: np.ndarray, n: int, rng: np.random.Generator,
     return idx
 
 
+def resolve_mesh(mesh):
+    """``"auto"`` | Mesh | None -> Mesh | None (mirrors ``fit_artifacts``).
+
+    Public: the serving host (:mod:`repro.launch.serve_forest`) resolves its
+    ``mesh=`` knob through the same contract as :func:`sample`.
+    """
+    if mesh is None or isinstance(mesh, Mesh):
+        return mesh
+    if mesh == "auto":
+        from repro.launch.mesh import auto_forest_mesh
+        return auto_forest_mesh()
+    raise ValueError(f"mesh={mesh!r}: expected a Mesh, None, or 'auto'")
+
+
 @partial(jax.jit, static_argnames=("solver_fn", "m", "depth", "n_t",
-                                   "multi_output", "eps"))
+                                   "multi_output", "eps", "impl", "mesh"))
 def _solve_all_classes(feat, thr_val, leaf, keys, mins, maxs, ts, *,
                        solver_fn, m: int, depth: int, n_t: int,
-                       multi_output: bool, eps: float):
+                       multi_output: bool, eps: float, impl: str = "xla",
+                       mesh: Optional[Mesh] = None):
     """[n_t, n_y, ...] forests -> [n_y, m, p] unscaled samples; one program.
 
-    The jit cache key is (solver fn, bucket m, forest shapes) — repeat calls
-    at the same bucket reuse the compiled program, and keying on the
-    resolved *function* (not its registry name) means re-registering a
-    sampler under an existing name correctly invalidates the cache.
+    The jit cache key is (solver fn, bucket m, forest shapes, impl, mesh) —
+    repeat calls at the same bucket reuse the compiled program, and keying
+    on the resolved *function* (not its registry name) means re-registering
+    a sampler under an existing name correctly invalidates the cache.
+
+    With a ``mesh``, sharding constraints partition the program: the class
+    axis over ``model`` (when divisible), rows over the data axes. All the
+    math is per-(class, row) deterministic, so the partitioned program
+    computes the same values as the single-device one.
     """
+    if mesh is not None:
+        model, rows = solve_axes(mesh, feat.shape[1])
+
+        def cns(arr, *spec):
+            return jax.lax.with_sharding_constraint(
+                arr, NamedSharding(mesh, PartitionSpec(*spec)))
+
+        feat = cns(feat, None, model)
+        thr_val = cns(thr_val, None, model)
+        leaf = cns(leaf, None, model)
+        keys = cns(keys, model)
+        mins = cns(mins, model)
+        maxs = cns(maxs, model)
 
     def one_class(feat_c, thr_c, leaf_c, key_c, mn, mx):
         k_x1, k_solve = jax.random.split(key_c)
@@ -71,11 +115,14 @@ def _solve_all_classes(feat, thr_val, leaf, keys, mins, maxs, ts, *,
         )(row_keys)
         forests = PackedForest(feat_c, thr_c, leaf_c, multi_output)
         x0 = solver_fn(x1, forests, depth=depth, n_t=n_t, ts=ts,
-                       key=k_solve, eps=eps)
+                       key=k_solve, eps=eps, impl=impl)
         return unscale(x0, mn, mx)
 
-    return jax.vmap(one_class, in_axes=(1, 1, 1, 0, 0, 0))(
+    out = jax.vmap(one_class, in_axes=(1, 1, 1, 0, 0, 0))(
         feat, thr_val, leaf, keys, mins, maxs)
+    if mesh is not None:
+        out = cns(out, model, rows, None)
+    return out
 
 
 def _resolve_sampler(fcfg, sampler: Optional[str]):
@@ -91,15 +138,22 @@ def _resolve_sampler(fcfg, sampler: Optional[str]):
 
 def sample(artifacts: ForestArtifacts, n: int, *,
            sampler: Optional[str] = None, seed: int = 0,
-           pad_to: Optional[int] = None):
+           pad_to: Optional[int] = None, mesh=None,
+           impl: Optional[str] = None):
     """Generate ``n`` rows (and their labels) from trained artifacts.
 
     One device dispatch regardless of the number of classes. ``pad_to``
     fixes the per-class row bucket (>= the largest per-class request) for
-    jit-cache-friendly serving.
+    jit-cache-friendly serving. ``mesh`` (``"auto"`` | Mesh | None) shards
+    the solve — classes on the model axis, rows on the data axes — for a
+    fixed seed the output matches the single-device solve. ``impl`` picks
+    the tree-predict backend; pre-shard the artifacts once with
+    :meth:`ForestArtifacts.shard` to avoid a per-call reshard when serving.
     """
     fcfg = artifacts.config
     _, spec = _resolve_sampler(fcfg, sampler)
+    impl = resolve_impl(impl, fcfg.predict_impl, env_var=_PREDICT_ENV)
+    mesh = resolve_mesh(mesh)
     rng = np.random.default_rng(seed)
     label_idx = sample_labels(artifacts.counts, n, rng, fcfg.label_sampler)
     n_y = artifacts.n_y
@@ -116,7 +170,8 @@ def sample(artifacts: ForestArtifacts, n: int, *,
         artifacts.feat, artifacts.thr_val, artifacts.leaf, keys,
         artifacts.mins, artifacts.maxs, ts,
         solver_fn=spec.fn, m=m, depth=fcfg.max_depth, n_t=fcfg.n_t,
-        multi_output=fcfg.multi_output, eps=fcfg.eps_diff)
+        multi_output=fcfg.multi_output, eps=fcfg.eps_diff, impl=impl,
+        mesh=mesh)
     x_all = np.asarray(x_all)                       # [n_y, m, p]
     X = np.concatenate([x_all[yi, :c] for yi, c in enumerate(per_class)])
     y = np.repeat(np.asarray(artifacts.classes), per_class)

@@ -70,3 +70,70 @@ def test_distributed_fit_8dev():
     assert out.returncode == 0, out.stderr[-3000:]
     payload = json.loads(out.stdout.strip().splitlines()[-1])
     assert payload["ok"]
+
+
+_SAMPLE_SHARDED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import numpy as np
+
+from repro.config import ForestConfig
+from repro.data.tabular import two_moons
+from repro.launch.serve_forest import ForestServer
+from repro.tabgen import fit_artifacts, sample
+
+X, y = two_moons(300, seed=0)
+fcfg = ForestConfig(n_t=5, duplicate_k=6, n_trees=8, max_depth=3, n_bins=16,
+                    reg_lambda=1.0)
+art = fit_artifacts(X, y, fcfg, seed=0)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+# sharded == single-device, bit-for-bit under a fixed seed (noise is drawn
+# per (class, row) counter, so the partitioning cannot change values);
+# n=151 keeps the row shards uneven on purpose
+G1, y1 = sample(art, 151, seed=1)
+G2, y2 = sample(art, 151, seed=1, mesh=mesh)
+assert np.array_equal(y1, y2)
+np.testing.assert_allclose(G1, G2, rtol=1e-5, atol=1e-5)
+
+# pre-sharded artifacts (the serving placement) agree too
+G3, _ = sample(art.shard(mesh), 151, seed=1, mesh=mesh)
+np.testing.assert_allclose(G1, G3, rtol=1e-5, atol=1e-5)
+
+# the kernel path composes with the mesh
+G4, _ = sample(art, 151, seed=1, mesh=mesh, impl="pallas_interpret")
+np.testing.assert_allclose(G1, G4, rtol=1e-5, atol=1e-5)
+
+# a class count that does not divide the model axis degrades to replicated
+# classes instead of failing
+y3 = np.arange(300) % 3
+art3 = fit_artifacts(X, y3, fcfg, seed=0)
+Ga, _ = sample(art3, 100, seed=4)
+Gb, _ = sample(art3, 100, seed=4, mesh=mesh)
+np.testing.assert_allclose(Ga, Gb, rtol=1e-5, atol=1e-5)
+
+# the mesh-backed server serves micro-batched requests on the same programs
+server = ForestServer(art, buckets=(64, 256), mesh=mesh)
+server.warmup()
+futs = [server.submit(n) for n in (17, 40, 90)]
+for n, f in zip((17, 40, 90), futs):
+    Xs, ys = f.result(timeout=300)
+    assert Xs.shape == (n, 2)
+server.stop()
+assert server.stats["requests"] == 3
+print(json.dumps({"ok": True}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.distributed
+def test_sharded_sample_matches_single_8dev():
+    out = subprocess.run([sys.executable, "-c", _SAMPLE_SHARDED],
+                         capture_output=True, text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["ok"]

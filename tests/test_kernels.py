@@ -68,6 +68,13 @@ def test_hist_kernel_property(n_nodes_pow, out, seed):
     (128, 4, 3, 5, 1, 64),
     (256, 8, 4, 10, 3, 128),
     (512, 16, 7, 4, 2, 256),
+    # odd row counts: the wrapper pads to the block and slices the output
+    # (regression — used to hard-crash on `assert n % rows_block == 0`,
+    # e.g. a 96-row serving bucket or an oversize exact-size request)
+    (96, 4, 3, 5, 1, 64),
+    (130, 8, 4, 3, 2, 64),
+    (300, 5, 3, 4, 1, 256),
+    (1, 3, 3, 2, 1, 256),
 ])
 def test_tree_predict_matches_ref(n, p, depth, n_trees, out, rows_block):
     rng = np.random.default_rng(1)

@@ -177,6 +177,95 @@ def test_forest_server_buckets_and_stats(moons_flow_artifacts):
     assert server.rows_per_sec() > 0
 
 
+def test_forest_server_microbatches_concurrent_requests(moons_flow_artifacts):
+    """submit() coalesces concurrent requests into shared dispatches and the
+    locked stats stay consistent under many submitter threads."""
+    import threading
+    from repro.launch.serve_forest import ForestServer
+    art, _ = moons_flow_artifacts
+    server = ForestServer(art, buckets=(64, 256),
+                          coalesce_window_s=0.05)
+    server.warmup()
+    sizes = [7, 18, 33, 5, 21, 40, 11, 3]
+    futs = [None] * len(sizes)
+
+    def submit(i):
+        futs[i] = server.submit(sizes[i])
+
+    threads = [threading.Thread(target=submit, args=(i,))
+               for i in range(len(sizes))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i, f in enumerate(futs):
+        X, y = f.result(timeout=120)
+        assert X.shape == (sizes[i], 2) and len(y) == sizes[i]
+        assert np.isfinite(X).all()
+    server.stop()
+    s = server.stats
+    assert s["requests"] == len(sizes)
+    assert s["rows"] == sum(sizes)
+    # the whole burst fits one coalescing window comfortably -> fewer
+    # dispatches than requests, and the two counters reconcile exactly
+    assert s["batches"] < len(sizes)
+    assert s["coalesced_requests"] == s["requests"] - s["batches"]
+
+
+def test_forest_server_cancelled_future_does_not_kill_batch(
+        moons_flow_artifacts):
+    """A request cancelled while queued is dropped; the rest of its batch
+    still resolves (regression: set_result on a cancelled Future raised and
+    killed the dispatcher thread)."""
+    from concurrent.futures import Future
+    from repro.launch.serve_forest import ForestServer, _Request
+    art, _ = moons_flow_artifacts
+    server = ForestServer(art, buckets=(64, 256))
+    server.warmup()
+    cancelled, live = Future(), Future()
+    assert cancelled.cancel()
+    server._serve_batch([_Request(10, server.samplers[0], cancelled),
+                         _Request(20, server.samplers[0], live)])
+    X, y = live.result(timeout=60)
+    assert X.shape == (20, 2) and len(y) == 20
+    assert server.stats["rows"] == 20  # the cancelled request never ran
+    # default coalesce cap tracks the largest bucket (oversize-compile guard)
+    assert server.max_coalesce_rows == max(server.buckets)
+
+
+def test_forest_server_zero_compiles_after_warmup(moons_flow_artifacts):
+    """After warmup, served requests (sync and micro-batched) reuse cached
+    programs — warmup goes through the same facade path as generate(), so
+    the caches can't diverge. Pinned via jax.log_compiles."""
+    import jax
+    import logging
+    from repro.launch.serve_forest import ForestServer
+    art, _ = moons_flow_artifacts
+    server = ForestServer(art, buckets=(64, 256))
+    server.warmup()
+
+    records = []
+
+    class Capture(logging.Handler):
+        def emit(self, record):
+            records.append(record.getMessage())
+
+    handler = Capture(level=logging.DEBUG)
+    logger = logging.getLogger("jax")
+    logger.addHandler(handler)
+    try:
+        with jax.log_compiles():
+            server.generate(50, seed=11)
+            fut = server.submit(23)
+            fut.result(timeout=120)
+            server.stop()
+    finally:
+        logger.removeHandler(handler)
+    compiles = [m for m in records
+                if "ompil" in m or "tracing" in m]  # Compiling/compilation
+    assert not compiles, compiles
+
+
 def test_deprecation_shim_still_works():
     from repro.core.forest_flow import ForestGenerativeModel
     X, y = two_moons(200, seed=0)
