@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   calo              - Table 3/4/5: chi^2 separation + classifier AUC
   generation        - Fig. 4 (bottom): SO vs MO generation time
   training          - §3.3 scaling: fit throughput + memory vs device count
+  store_scaling     - §3.3 out-of-core: in-memory vs DatasetStore-backed fit
+                      (peak RSS + ABBA min-of-reps throughput vs dataset size)
   ablation          - Fig. 3 / 10 / 11: early stopping + K/n_tree sweeps
   roofline          - dry-run roofline table (scale deliverable)
 
@@ -47,6 +49,9 @@ def main() -> None:
         "training": lambda: bench_training.main(
             quick=quick, json_path=os.path.join(args.json_dir,
                                                 "BENCH_training.json")),
+        "store_scaling": lambda: bench_resource_scaling.main_store(
+            quick=quick, json_path=os.path.join(
+                args.json_dir, "BENCH_resource_scaling.json")),
         "ablation": lambda: bench_ablations.main(quick=quick),
         "roofline": lambda: bench_roofline.main(),
     }

@@ -17,6 +17,16 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m repro.launch.train_forest --demo --demo-rows 256 --demo-cols 4 \
     --mesh 4x2 --n-t 4 --n-trees 6 --max-depth 3 --n-bins 16 --duplicate-k 6
 
+echo "== out-of-core smoke: ingest -> store-backed fit (DatasetStore) =="
+store_dir="$(mktemp -d)"
+python -m repro.launch.ingest --out "$store_dir/store" \
+  --synthetic 4096x8x2 --shard-rows 1024 --batch-rows 512
+python -m repro.launch.train_forest --data-dir "$store_dir/store" \
+  --mesh none --n-t 2 --n-trees 4 --max-depth 3 --n-bins 16 --duplicate-k 2
+# crash-resume path: a second ingest over the same spec must be a no-op
+python -m repro.launch.ingest --out "$store_dir/store" \
+  --synthetic 4096x8x2 --shard-rows 1024 --batch-rows 512 --resume
+
 echo "== generation benchmark (emits BENCH_generation.json) =="
 # write to a scratch dir: the committed trajectory artifacts stay untouched
 # and a stale copy can't mask a benchmark failure
@@ -27,6 +37,13 @@ test -s "$bench_out/BENCH_generation.json" && echo "BENCH_generation.json writte
 echo "== training benchmark (emits BENCH_training.json) =="
 python benchmarks/run.py --only training --json-dir "$bench_out"
 test -s "$bench_out/BENCH_training.json" && echo "BENCH_training.json written"
+
+echo "== store-scaling benchmark (emits BENCH_resource_scaling.json) =="
+# in-memory vs DatasetStore-backed fit: peak-RSS record + ABBA min-of-reps
+# throughput, incl. a dataset >= 10x the largest in-memory bench config
+python benchmarks/run.py --only store_scaling --json-dir "$bench_out"
+test -s "$bench_out/BENCH_resource_scaling.json" \
+  && echo "BENCH_resource_scaling.json written"
 
 echo "== benchmark regression gate (vs committed trajectory) =="
 # >30% rows/sec drop vs the committed BENCH_*.json fails the build; tune

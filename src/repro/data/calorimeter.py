@@ -68,6 +68,18 @@ def generate(dataset: str, n: int, seed: int = 0
     return X[:, :p], y.astype(np.int64)
 
 
+def generate_batches(dataset: str, n: int, *, batch_rows: int = 8192,
+                     seed: int = 0):
+    """Chunked twin of :func:`generate` for :func:`repro.data.store.ingest`:
+    yields ``(X, y)`` shower batches totalling ``n`` rows, batch ``b`` from
+    its own stream ``[seed, b]`` (deterministic, replayable, never holds
+    more than ``batch_rows`` showers in memory)."""
+    for b, s in enumerate(range(0, n, batch_rows)):
+        rows = min(batch_rows, n - s)
+        batch_seed = np.random.SeedSequence([seed, b]).generate_state(1)[0]
+        yield generate(dataset, rows, seed=int(batch_seed))
+
+
 # ---------------------------------------------------------------------------
 # Challenge metrics (App. A.1)
 # ---------------------------------------------------------------------------

@@ -1,5 +1,14 @@
 """Synthetic tabular datasets for resource-scaling benchmarks (paper §4.1,
-App. D.1) plus small real-ish benchmark generators for quality metrics."""
+App. D.1) plus small real-ish benchmark generators for quality metrics.
+
+The ``*_batches`` variants stream the same families as bounded row batches
+for :func:`repro.data.store.ingest` and the out-of-core benchmarks: batch
+``b`` is drawn from its own PRNG stream seeded ``[seed, b]``, so any run
+over the same ``(n, batch_rows, seed)`` yields bit-identical batches, a
+larger-than-RAM dataset never exists in memory at once, and a crash-resumed
+ingest can replay the stream from scratch at generator (not storage) cost.
+They are deliberately *not* row-equal to their one-shot twins (those
+interleave X and y draws on a single stream)."""
 from __future__ import annotations
 
 import numpy as np
@@ -14,6 +23,19 @@ def synthetic_resource_dataset(n: int, p: int, n_y: int, seed: int = 0):
     return X, y
 
 
+def synthetic_resource_batches(n: int, p: int, n_y: int, *,
+                               batch_rows: int = 65536, seed: int = 0):
+    """Chunked twin of :func:`synthetic_resource_dataset`: yields
+    ``(X [k, p] fp32, y [k] int64)`` batches totalling exactly ``n`` rows,
+    deterministic in ``(n, p, n_y, batch_rows, seed)``."""
+    for b, s in enumerate(range(0, n, batch_rows)):
+        rows = min(batch_rows, n - s)
+        rng = np.random.default_rng([seed, b])
+        X = rng.normal(size=(rows, p)).astype(np.float32)
+        y = rng.integers(0, n_y, size=rows).astype(np.int64)
+        yield X, y
+
+
 def two_moons(n: int, noise: float = 0.08, seed: int = 0):
     rng = np.random.default_rng(seed)
     n2 = n // 2
@@ -26,6 +48,19 @@ def two_moons(n: int, noise: float = 0.08, seed: int = 0):
     return X[perm].astype(np.float32), y[perm]
 
 
+def two_moons_batches(n: int, noise: float = 0.08, *,
+                      batch_rows: int = 65536, seed: int = 0):
+    """Chunked twin of :func:`two_moons` (each batch is an independently
+    shuffled small two-moons draw; the union has the same distribution)."""
+    for b, s in enumerate(range(0, n, batch_rows)):
+        rows = min(batch_rows, n - s)
+        batch_seed = np.random.SeedSequence([seed, b]).generate_state(1)[0]
+        # two_moons returns 2*(n//2) rows: over-ask by one and slice so
+        # odd batches (e.g. the tail) still total exactly n
+        X, y = two_moons(rows + rows % 2, noise=noise, seed=int(batch_seed))
+        yield X[:rows], y[:rows]
+
+
 def correlated_gaussian(n: int, p: int, seed: int = 0):
     """Full-rank correlated Gaussian — tests joint-structure learning (the
     paper's MO-trees motivation)."""
@@ -34,3 +69,18 @@ def correlated_gaussian(n: int, p: int, seed: int = 0):
     cov = A @ A.T + 0.1 * np.eye(p)
     X = rng.multivariate_normal(np.zeros(p), cov, size=n)
     return X.astype(np.float32), cov
+
+
+def correlated_gaussian_batches(n: int, p: int, *, batch_rows: int = 65536,
+                                seed: int = 0):
+    """Chunked, label-free correlated Gaussian (one shared covariance drawn
+    from ``seed``; rows per batch from stream ``[seed, b]``) — exercises
+    the unlabelled ingest path with a non-trivial joint structure."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(p, p)) / np.sqrt(p)
+    cov = A @ A.T + 0.1 * np.eye(p)
+    for b, s in enumerate(range(0, n, batch_rows)):
+        rows = min(batch_rows, n - s)
+        brng = np.random.default_rng([seed, b])
+        yield brng.multivariate_normal(np.zeros(p), cov,
+                                       size=rows).astype(np.float32)

@@ -23,6 +23,26 @@ def fit_bins(x, n_bins: int):
     return edges.astype(jnp.float32)
 
 
+def fit_bins_streaming(X, n_bins: int, *, max_entries: int = 2048,
+                       row_chunk: int = 65536):
+    """Out-of-core twin of :func:`fit_bins`: per-feature quantile edges
+    without ever sorting (or even materialising) a full column.
+
+    ``X`` is fed in row chunks through a mergeable
+    :class:`repro.data.sketch.QuantileSketch`; a
+    :class:`repro.data.store.DatasetStore` short-circuits to the sketch its
+    ingest already built, so the edges cost one manifest read. Exact
+    (bit-equal to ``fit_bins``) while the data has at most ``max_entries``
+    rows; bounded-rank-error approximate beyond that.
+    """
+    sketch = getattr(X, "sketch", None)   # DatasetStore: precomputed
+    if sketch is None:
+        from repro.data.sketch import sketch_dataset
+        sketch = sketch_dataset(X, max_entries=max_entries,
+                                row_chunk=row_chunk)
+    return jnp.asarray(sketch.edges(n_bins, mode="linear"))
+
+
 def transform(x, edges):
     """Bin codes: code[i, j] = number of edges strictly below x[i, j].
 

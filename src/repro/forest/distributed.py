@@ -157,6 +157,13 @@ def build_row_shards(mesh: Mesh, X_np, cid_full, mins, maxs, perm,
     ``(x0, w, class_id)`` as data-axis-sharded ``jax.Array``s — the only
     host→device row traffic in a fit, which the pipelined trainer performs
     on its prefetch thread so the upload overlaps dispatch-side work.
+
+    ``X_np`` may be any array-like supporting fancy row indexing and
+    ``.shape`` — in particular a :class:`repro.data.store.DatasetStore`,
+    whose ``__getitem__`` gathers each device's rows directly from the
+    on-disk shards they live in (grouped per shard, memmap reads). The
+    dataset is then never resident on the host as a whole: peak host
+    memory per callback is one device's row slice.
     """
     from repro.tabgen.artifacts import rescale
 

@@ -14,6 +14,13 @@ Training real data (X [n, p] float, optional y [n] labels, in an .npz):
   PYTHONPATH=src python -m repro.launch.train_forest \
       --data table.npz --mesh auto --checkpoint-dir ckpt --resume --out model
 
+Out-of-core training from an ingested DatasetStore (``repro.launch.ingest``)
+— row shards stream from disk, class stats/scalers come precomputed from
+the store manifest, and no host copy of the dataset is ever materialised:
+
+  PYTHONPATH=src python -m repro.launch.train_forest \
+      --data-dir data/synth1m --mesh auto --checkpoint-dir ckpt --out model
+
 Environment knobs: ``REPRO_HIST_IMPL=pallas`` selects the Pallas histogram
 kernel on TPU (default ``xla``); ``--int8-codes`` stores bin codes at int8
 (4x HBM reduction at n_bins ≤ 127).
@@ -57,6 +64,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--data", default=None,
                     help=".npz with X [n, p] (and optionally y [n])")
+    ap.add_argument("--data-dir", default=None,
+                    help="DatasetStore directory from repro.launch.ingest — "
+                         "out-of-core fit: row shards stream from disk, "
+                         "stats come precomputed from the store manifest "
+                         "(overrides --data/--demo)")
     ap.add_argument("--demo", action="store_true",
                     help="train on a synthetic dataset instead of --data")
     ap.add_argument("--demo-rows", type=int, default=2048)
@@ -103,7 +115,13 @@ def main(argv=None):
     from repro.config import ForestConfig
     from repro.tabgen import PipelineConfig, fit_artifacts
 
-    if args.demo or args.data is None:
+    if args.data_dir:
+        from repro.data.store import DatasetStore
+        X, y = DatasetStore(args.data_dir), None
+        print(f"store {args.data_dir}: {X.n_rows} rows x {X.p} cols in "
+              f"{X.n_shards} shards ({X.nbytes / 2**20:.1f} MiB on disk, "
+              "streamed — not resident)")
+    elif args.demo or args.data is None:
         X, y = _demo_data(args.demo_rows, args.demo_cols, args.demo_classes,
                           args.seed)
         print(f"demo dataset: X {X.shape}, {args.demo_classes} classes")
@@ -125,7 +143,11 @@ def main(argv=None):
     pipeline = (None if args.serial else PipelineConfig(
         prefetch_depth=args.prefetch_depth,
         async_checkpoint=not args.sync_checkpoint))
-    if mesh is None:
+    if mesh is None and args.data_dir:
+        print("trainer: out-of-core store fit on a 1x1 mesh "
+              f"({jax.devices()[0].platform}; sharded trainer, rows "
+              "streamed from disk)")
+    elif mesh is None:
         print(f"trainer: single-device ({jax.devices()[0].platform})")
     else:
         shape = dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -49,8 +49,20 @@ class TabularGenerator:
         :class:`jax.sharding.Mesh`, ``"auto"`` (one mesh over every visible
         device), or ``None`` for the single-device path. ``pipeline``
         (``"auto"`` | :class:`~repro.tabgen.fitting.PipelineConfig` |
-        ``None``) picks the double-buffered vs serial distributed loop."""
+        ``None``) picks the double-buffered vs serial distributed loop.
+
+        ``X`` may be a :class:`repro.data.store.DatasetStore` for
+        out-of-core fits (see :func:`repro.tabgen.fit_artifacts`) — but
+        only schema-free: a schema re-encodes raw rows in memory, so
+        encode before ingesting and fit the store without one."""
         if self.schema is not None:
+            from repro.data.store import DatasetStore
+            if isinstance(X, DatasetStore):
+                raise ValueError(
+                    "schema-aware fit needs raw in-memory rows (the schema "
+                    "one-hot/integer-encodes them before training); encode "
+                    "with TabularSchema before ingesting, then fit the "
+                    "store without cat_cols/int_cols/schema")
             self.schema.fit(X)
             X = self.schema.encode(X)
         self.artifacts = fit_artifacts(

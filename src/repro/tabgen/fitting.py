@@ -28,6 +28,24 @@ grid sharded over the model axis, and host→device streaming of row chunks so
 X never has to fit on a single device. ``mesh="auto"`` builds one from
 ``jax.devices()``; ``mesh=None`` keeps the single-device path.
 
+Memory model (PR 5): two data routes with different peak-residency classes.
+
+* In-memory single-device route (``mesh=None``, host arrays): peak host
+  memory is O(dataset + padded class blocks) — ``prepare_classes`` streams
+  the class stats in row chunks and gathers rows straight into the padded
+  ``[n_y, n_max, p]`` blocks, so the old full class-sorted intermediate
+  copy is gone, but the padded blocks themselves remain. Use it for data
+  that comfortably fits in RAM.
+* Out-of-core route (``X`` is a :class:`repro.data.store.DatasetStore`):
+  always runs the sharded trainer (a 1x1 mesh is built if none is given).
+  Class stats and quantile summaries come precomputed from the store
+  manifest (no fit-time stats pass at all), and ``build_row_shards``
+  gathers each device's row slice directly from the on-disk shards — peak
+  *host* memory is O(shard + batch) staging on top of the device-resident
+  row shards (which on TPU live in HBM, and in aggregate hold the dataset
+  exactly once). No dataset-sized host copy, padded block, or full-column
+  sort exists anywhere on this route.
+
 Pipelining (PR 3): the distributed fit loop is a staged producer/consumer
 pipeline — a prefetch thread builds batch ``b+1``'s host-side inputs (the
 sharded row arrays on first use, per-batch timesteps/classes/PRNG keys)
@@ -54,6 +72,7 @@ import numpy as np
 
 from repro.config import ForestConfig
 from repro.core import interpolants as itp
+from repro.data.store import DatasetStore
 from repro.forest.binning import edges_with_sentinel, pack_codes, transform
 from repro.forest.boosting import fit_ensemble
 from repro.tabgen.artifacts import (RESULT_FIELDS, ForestArtifacts,
@@ -75,35 +94,45 @@ def weighted_edges(x, w, n_bins: int):
     return jnp.transpose(s[idx])
 
 
-def prepare_classes(X: np.ndarray, y: Optional[np.ndarray]):
-    """Sort rows by class into dense padded [n_y, n_max, p] blocks with
-    per-class min-max scalers (Issue 5: sort + static-shape slice).
+def prepare_classes(X: np.ndarray, y: Optional[np.ndarray],
+                    row_chunk: int = 65536):
+    """Gather rows by class into dense padded [n_y, n_max, p] blocks with
+    per-class min-max scalers (Issue 5: static-shape blocks, no boolean
+    masks inside the device program).
+
+    Class stats come from one chunked streaming pass
+    (:func:`class_stats_streaming`) and rows are rescaled + written
+    straight into the padded blocks chunk by chunk, so peak extra memory
+    is the padded ``[n_y, n_max, p]`` output plus one row chunk — the
+    previous implementation first materialised a full class-sorted fp32
+    copy of X (argsort + fancy index), doubling the transient footprint.
+    Bit-identical output: within-class row order is the original row order
+    either way (the old sort was stable).
 
     Returns (Xc, Wc, classes, counts, mins, maxs).
     """
-    X = np.asarray(X, np.float32)          # Issue 7: fp32 end-to-end
+    if not hasattr(X, "shape"):      # plain sequences still accepted
+        X = np.asarray(X, np.float32)
     n, p = X.shape
     if y is None:
         y = np.zeros((n,), np.int64)
-    order = np.argsort(y, kind="stable")
-    X, y = X[order], np.asarray(y)[order]
-    classes, counts = np.unique(y, return_counts=True)
+    y = np.asarray(y)
+    classes, counts, mins, maxs = class_stats_streaming(X, y, row_chunk)
     n_y = len(classes)
     n_max = int(counts.max())
     Xc = np.zeros((n_y, n_max, p), np.float32)
     Wc = np.zeros((n_y, n_max), np.float32)
-    mins = np.zeros((n_y, p), np.float32)
-    maxs = np.ones((n_y, p), np.float32)
-    start = 0
+    pos = np.zeros((n_y,), np.int64)
+    for s in range(0, n, row_chunk):
+        xb = np.asarray(X[s:s + row_chunk], np.float32)  # Issue 7: fp32
+        cid = np.searchsorted(classes, y[s:s + row_chunk])
+        for i in np.unique(cid):
+            rows = rescale(xb[cid == i], mins[i], maxs[i])
+            Xc[i, pos[i]:pos[i] + len(rows)] = rows
+            pos[i] += len(rows)
     for i, c in enumerate(counts):
-        rows = X[start:start + c]
-        mins[i] = rows.min(axis=0)
-        maxs[i] = rows.max(axis=0)
-        rows = rescale(rows, mins[i], maxs[i])       # per-class scaler
-        Xc[i, :c] = rows
-        Xc[i, c:] = rows[0] if c else 0.0
+        Xc[i, c:] = Xc[i, 0] if c else 0.0   # repeat-first-row padding
         Wc[i, :c] = 1.0
-        start += c
     return Xc, Wc, classes, counts, mins, maxs
 
 
@@ -408,6 +437,17 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
     pipeline (and vice versa) — the execution style, like the mesh shape,
     is deliberately not fingerprinted. The single-device trainer ignores
     ``pipeline`` (its batches have no host/device overlap to hide).
+
+    Out-of-core data: ``X`` may be a :class:`repro.data.store.DatasetStore`
+    (built by :func:`repro.data.store.ingest` / ``repro.launch.ingest``).
+    Store-backed fits always run the sharded trainer — when no mesh is
+    given (or ``"auto"`` resolves to a single device) a 1x1 mesh is built,
+    because the padded single-device route would materialise the dataset.
+    Class stats and scalers are read from the store manifest (no fit-time
+    stats pass) and row shards are gathered straight from disk; ``y``
+    defaults to the store's own labels. A store-backed fit is bit-identical
+    to the in-memory sharded fit of the same rows on the same mesh, and
+    their checkpoints interoperate.
     """
     if isinstance(mesh, str):
         if mesh != "auto":
@@ -415,6 +455,11 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
                              "'auto'")
         from repro.launch.mesh import auto_forest_mesh
         mesh = auto_forest_mesh()
+    if mesh is None and isinstance(X, DatasetStore):
+        # out-of-core route: the sharded trainer streams per-device row
+        # slices from the store's shards; the single-device route would
+        # densify the whole dataset into padded class blocks
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
     # validate on every path: a malformed pipeline knob should fail loudly
     # on a single-device box too, not first on the production mesh
     if pipeline == "auto":
@@ -474,7 +519,7 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
 
     fingerprint = _manifest_fingerprint(
         fcfg, n_t=fcfg.n_t, n_y=n_y, batch_size=bs,
-        n_rows=np.asarray(X).shape[0], p=p, trainer="single")
+        n_rows=np.shape(X)[0], p=p, trainer="single")
     results = _run_grid_batches(run_batch, grid, bs,
                                 checkpoint_dir=checkpoint_dir, resume=resume,
                                 fingerprint=fingerprint)
@@ -514,12 +559,29 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
                                           build_row_shards,
                                           make_distributed_fit)
 
-    # keep memmap-style inputs lazy: only per-shard chunks are ever copied
-    X_np = X if isinstance(X, np.ndarray) else np.asarray(X, np.float32)
-    n, p = X_np.shape
-    if y is None:
-        y = np.zeros((n,), np.int64)
-    classes, counts, mins, maxs = class_stats_streaming(X_np, y, row_chunk)
+    # keep memmap/store inputs lazy: only per-shard chunks are ever copied
+    if isinstance(X, DatasetStore):
+        X_np = X                       # row gathers read straight from disk
+        n, p = X.shape
+        if y is None:
+            y = X.labels()
+            # one manifest read replaces the whole fit-time stats pass (the
+            # values are exactly what class_stats_streaming would recompute)
+            classes, counts, mins, maxs = X.class_stats()
+        else:
+            # explicit labels override the store's own: the manifest stats
+            # were computed under the store's grouping, so re-stream the
+            # per-class scalers in chunked reads over the shards
+            y = np.asarray(y)
+            classes, counts, mins, maxs = class_stats_streaming(X, y,
+                                                                row_chunk)
+    else:
+        X_np = X if isinstance(X, np.ndarray) else np.asarray(X, np.float32)
+        n, p = X_np.shape
+        if y is None:
+            y = np.zeros((n,), np.int64)
+        classes, counts, mins, maxs = class_stats_streaming(X_np, y,
+                                                            row_chunk)
     n_y = len(classes)
     cid_full = np.searchsorted(classes, np.asarray(y)).astype(np.int32)
 
