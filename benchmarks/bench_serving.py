@@ -1,0 +1,199 @@
+"""Serving control-plane benchmark: open-loop mixed-tenant load against the
+in-flight scheduler vs the PR-4 drain-then-serve reference.
+
+Two tenants share one model, open-loop (arrivals follow a precomputed
+exponential-gap schedule and are submitted at their scheduled time whether
+or not the server is keeping up — the load that exposes queueing collapse,
+unlike closed-loop clients that self-throttle):
+
+* ``ia`` — interactive: many small requests, ``priority="interactive"``;
+* ``bk`` — bulk: few large requests, ``priority="bulk"``, sized to keep the
+  device saturated for the whole run.
+
+Both arms serve the *identical* schedule ABBA-interleaved (inflight, drain,
+drain, inflight, ...), min-of-reps wall -> max rows/sec, same methodology as
+the generation/training benches on this noisy box. The drain arm
+(``sync_resolve=True``) resolves each batch before admitting the next —
+PR-4 semantics — so its host-side unpad/shuffle/deliver time stacks onto
+device time; the in-flight arm overlaps the two. Sustained throughput is
+``total rows / (last future resolved - first request submitted)``.
+
+Gated metric: ``inflight_rows_per_sec``. The ``drain_reference_*`` metrics
+are the comparison arm (exempt in scripts/check_bench.py — reference arms
+are compared against, not gated). Latency percentiles (p50/p99 per priority
+class, ms) are recorded for the trajectory; the acceptance story is bulk
+saturating the device while the interactive p99 stays bounded (interactive
+pops before bulk at every dispatch).
+
+CI-container caveat (same one the training pipeline records): on the
+2-core box the XLA device computation itself occupies both cores, so the
+host work the in-flight arm overlaps (unpad/shuffle/slice/deliver + batch
+formation) is only ~5% of wall — the measured speedup is a *floor*, real
+accelerators with free host cores overlap far more. The committed
+trajectory therefore gates the in-flight arm's absolute rows/sec, not the
+speedup ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ForestConfig
+from repro.data.tabular import synthetic_resource_dataset
+from repro.tabgen import fit_artifacts
+
+#: static workload identity — check_bench matches records on ``config``, so
+#: these are constants, not tuning knobs resolved at run time
+QUICK = dict(n_fit=512, p=4, n_y=2, n_t=6, n_trees=10,
+             ia_requests=100, ia_rows=32, ia_rate_per_s=400.0,
+             bk_requests=40, bk_rows=1024, bk_rate_per_s=200.0,
+             buckets=(64, 1024), reps=3)
+FULL = dict(n_fit=2000, p=10, n_y=2, n_t=8, n_trees=20,
+            ia_requests=300, ia_rows=32, ia_rate_per_s=600.0,
+            bk_requests=120, bk_rows=2048, bk_rate_per_s=400.0,
+            buckets=(64, 2048), reps=5)
+
+
+def _schedule(cfg: dict, seed: int = 0):
+    """The open-loop arrival plan: [(t_offset_s, priority, n_rows)],
+    time-sorted, identical for every arm and rep."""
+    rng = np.random.default_rng(seed)
+    arr = []
+    for prio, count, rows, rate in (
+            ("interactive", cfg["ia_requests"], cfg["ia_rows"],
+             cfg["ia_rate_per_s"]),
+            ("bulk", cfg["bk_requests"], cfg["bk_rows"],
+             cfg["bk_rate_per_s"])):
+        t = np.cumsum(rng.exponential(1.0 / rate, size=count))
+        arr.extend((float(ti), prio, rows) for ti in t)
+    arr.sort()
+    return arr
+
+
+def _run_arm(server, schedule):
+    """Replay the schedule open-loop; returns (rows_per_sec, lat_ms_by_prio).
+
+    Latency is measured from *scheduled* arrival (not actual submit): when
+    the submitting thread itself falls behind a saturated server, that lag
+    is queueing delay the client experiences and must be charged to the arm.
+    """
+    done = {}  # idx -> completion monotonic time
+
+    def _mark(idx):
+        def cb(_fut):
+            done[idx] = time.monotonic()
+        return cb
+
+    t0 = time.monotonic()
+    futs = []
+    for idx, (t_off, prio, n_rows) in enumerate(schedule):
+        delay = t0 + t_off - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        f = server.submit(n_rows, priority=prio)
+        f.add_done_callback(_mark(idx))
+        futs.append(f)
+    for f in futs:
+        f.result(timeout=600)
+    t_end = max(done.values())
+    total_rows = sum(n for _, _, n in schedule)
+    lat = {"interactive": [], "bulk": []}
+    for idx, (t_off, prio, _) in enumerate(schedule):
+        lat[prio].append((done[idx] - (t0 + t_off)) * 1e3)
+    return total_rows / (t_end - t0), lat
+
+
+def _percentiles(lat_ms):
+    return (float(np.percentile(lat_ms, 50)), float(np.percentile(lat_ms, 99)))
+
+
+def main(quick: bool = True, json_path: str = None) -> None:
+    from repro.launch.serve_forest import ForestServer
+    cfg = QUICK if quick else FULL
+    X, y = synthetic_resource_dataset(cfg["n_fit"], cfg["p"], cfg["n_y"],
+                                      seed=0)
+    fcfg = ForestConfig(method="flow", n_t=cfg["n_t"], duplicate_k=5,
+                        n_trees=cfg["n_trees"], max_depth=4, n_bins=32,
+                        reg_lambda=1.0, multi_output=True)
+    art = fit_artifacts(X, y, fcfg, seed=0)
+    schedule = _schedule(cfg)
+
+    def build(sync_resolve):
+        s = ForestServer(art, buckets=cfg["buckets"],
+                         sync_resolve=sync_resolve)
+        s.warmup()
+        return s
+
+    servers = {"inflight": build(False), "drain": build(True)}
+    results = {"inflight": [], "drain": []}
+    lats = {"inflight": [], "drain": []}
+    order = ["inflight", "drain", "drain", "inflight"]  # ABBA
+    for rep in range(cfg["reps"]):
+        for arm in order:
+            rps, lat = _run_arm(servers[arm], schedule)
+            results[arm].append(rps)
+            lats[arm].append(lat)
+    stats = {arm: servers[arm].scheduler.stats_snapshot()
+             for arm in servers}
+    for arm in servers:
+        servers[arm].stop()
+
+    best = {arm: max(v) for arm, v in results.items()}
+    # latency from each arm's best-throughput rep (the least host-noise run)
+    best_lat = {arm: lats[arm][int(np.argmax(results[arm]))]
+                for arm in results}
+    ia_p50, ia_p99 = _percentiles(best_lat["inflight"]["interactive"])
+    bk_p50, bk_p99 = _percentiles(best_lat["inflight"]["bulk"])
+    d_ia_p50, d_ia_p99 = _percentiles(best_lat["drain"]["interactive"])
+
+    record = {
+        "config": {"section": "serving_open_loop", **{
+            k: (list(v) if isinstance(v, tuple) else v)
+            for k, v in cfg.items()}},
+        "devices": 1,
+        "mesh": None,
+        "serving": {
+            "includes_compile": False,
+            "reps_per_arm": 2 * cfg["reps"],
+            "total_rows": sum(n for _, _, n in schedule),
+            "inflight_rows_per_sec": best["inflight"],
+            # reference arm (PR-4 semantics; check_bench-exempt)
+            "drain_reference_rows_per_sec": best["drain"],
+            "inflight_vs_drain_speedup": best["inflight"] / best["drain"],
+            "interactive_p50_ms": ia_p50,
+            "interactive_p99_ms": ia_p99,
+            "bulk_p50_ms": bk_p50,
+            "bulk_p99_ms": bk_p99,
+            "drain_interactive_p50_ms": d_ia_p50,
+            "drain_interactive_p99_ms": d_ia_p99,
+            "inflight_max_inflight_observed":
+                stats["inflight"]["max_inflight_observed"],
+            "inflight_batches": stats["inflight"]["batches"],
+            "inflight_dropped_deadline": stats["inflight"]["dropped_deadline"],
+        },
+    }
+    emit("serving/open_loop/inflight",
+         f"{1e6 / best['inflight']:.2f}",
+         f"rows_per_sec={best['inflight']:.0f}|"
+         f"speedup_vs_drain={record['serving']['inflight_vs_drain_speedup']:.2f}x|"
+         f"interactive_p99_ms={ia_p99:.1f}|bulk_p99_ms={bk_p99:.1f}")
+    emit("serving/open_loop/drain_reference",
+         f"{1e6 / best['drain']:.2f}",
+         f"rows_per_sec={best['drain']:.0f}|"
+         f"interactive_p99_ms={d_ia_p99:.1f}")
+
+    if json_path:
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump({"bench": "serving", "records": [record]}, f, indent=1)
+        emit("serving/json", "-", json_path)
+
+
+if __name__ == "__main__":
+    main(json_path="BENCH_serving.json")

@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   training          - §3.3 scaling: fit throughput + memory vs device count
   store_scaling     - §3.3 out-of-core: in-memory vs DatasetStore-backed fit
                       (peak RSS + ABBA min-of-reps throughput vs dataset size)
+  serving           - open-loop mixed-tenant load: in-flight scheduler vs
+                      drain-then-serve reference + latency percentiles
   ablation          - Fig. 3 / 10 / 11: early stopping + K/n_tree sweeps
   roofline          - dry-run roofline table (scale deliverable)
 
@@ -36,7 +38,7 @@ def main() -> None:
 
     from benchmarks import (bench_ablations, bench_calo, bench_generation,
                             bench_quality, bench_resource_scaling,
-                            bench_roofline, bench_training)
+                            bench_roofline, bench_serving, bench_training)
     sections = {
         "resource_scaling": lambda: bench_resource_scaling.main(
             sizes=(200, 500, 1000) if quick else (1000, 3000, 10000)),
@@ -52,6 +54,9 @@ def main() -> None:
         "store_scaling": lambda: bench_resource_scaling.main_store(
             quick=quick, json_path=os.path.join(
                 args.json_dir, "BENCH_resource_scaling.json")),
+        "serving": lambda: bench_serving.main(
+            quick=quick, json_path=os.path.join(args.json_dir,
+                                                "BENCH_serving.json")),
         "ablation": lambda: bench_ablations.main(quick=quick),
         "roofline": lambda: bench_roofline.main(),
     }

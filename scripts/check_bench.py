@@ -17,10 +17,11 @@ present on only one side are reported but don't fail (a retuned benchmark
 should land together with its refreshed baseline). Error records on the
 baseline side are skipped; on the fresh side they fail the gate.
 
-The default 30% tolerance is deliberately loose: CI boxes are noisy and the
-committed trajectory may come from different hardware. Tighten with
-``--tolerance`` or the ``BENCH_TOLERANCE`` environment variable once the
-fleet is homogeneous.
+The default tolerance started at a loose 30% when the gate compared
+mean-of-3 walls; every gated bench has since moved to ABBA-interleaved
+min-of-reps (the stable statistic on these noisy boxes), so the default is
+now 25%. Tighten further with ``--tolerance`` or the ``BENCH_TOLERANCE``
+environment variable once the fleet is homogeneous.
 """
 from __future__ import annotations
 
@@ -30,7 +31,7 @@ import os
 import sys
 
 DEFAULT_FILES = ("BENCH_generation.json", "BENCH_training.json",
-                 "BENCH_resource_scaling.json")
+                 "BENCH_resource_scaling.json", "BENCH_serving.json")
 METRIC_SUFFIX = "rows_per_sec"
 IDENTITY_KEYS = ("config", "devices", "mesh")
 # Reference arms exist to be compared against, not to be our perf
@@ -44,8 +45,12 @@ IDENTITY_KEYS = ("config", "devices", "mesh")
 # ``padded_coldstart`` is the store-scaling bench's single-device padded
 # reference arm: its per-call jit makes the timing compile-dominated, so
 # it is recorded for the RSS comparison, not gated as throughput.
+# ``drain_reference`` is the serving bench's PR-4 drain-then-serve arm —
+# it exists to be beaten by the in-flight scheduler (the gated
+# ``inflight_rows_per_sec``), and a *faster* drain arm would read as a
+# regression of a code path we deliberately keep only as a baseline.
 IGNORED_METRIC_SUBSTRINGS = ("per_class_loop", "pallas_interpret",
-                             "padded_coldstart")
+                             "padded_coldstart", "drain_reference")
 
 
 def record_key(rec: dict) -> str:
@@ -140,8 +145,8 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=".",
                     help="directory with the committed trajectory files")
     ap.add_argument("--tolerance", type=float,
-                    default=float(os.environ.get("BENCH_TOLERANCE", "0.30")),
-                    help="allowed fractional rows/sec drop (default 0.30)")
+                    default=float(os.environ.get("BENCH_TOLERANCE", "0.25")),
+                    help="allowed fractional rows/sec drop (default 0.25)")
     ap.add_argument("--files", nargs="*", default=list(DEFAULT_FILES))
     ap.add_argument("--allow-no-overlap", action="store_true",
                     help="tolerate zero comparable metrics (nightly --full "

@@ -1,22 +1,29 @@
 """Forest serving driver: warm, pre-jitted tabular generation + imputation.
 
-Loads :class:`ForestArtifacts` (or a full :class:`TabularGenerator` with a
-schema sidecar) from disk and answers batched requests. Request sizes are
-rounded up to a small set of batch buckets so every (sampler, bucket) pair
-compiles exactly once at warm-up — after that each request is one cached
-device program (the tabgen sampler is class-vmapped, so this holds for any
-number of classes).
+Since PR 6 this is a thin single-model front end over the
+:mod:`repro.serving` control plane: a one-entry
+:class:`~repro.serving.ModelRegistry`, an
+:class:`~repro.serving.AdmissionController` (permissive by default — no
+rate limits, generous queue bounds), and the
+:class:`~repro.serving.InflightScheduler`. The multi-model, multi-tenant
+HTTP tier lives in :mod:`repro.launch.serve_http`; both share every
+control-plane behavior by construction.
 
-Scaling knobs (PR 4):
+Serving properties (carried over from PR 4, upgraded in PR 6):
 
-* ``mesh=`` shards every solve the way training shards fits — classes on
-  the model axis, rows on the data axes (artifacts are pre-placed once at
-  construction, so requests never pay a reshard);
-* ``impl=`` selects the tree-predict backend (``xla`` | ``pallas`` |
-  ``pallas_interpret``) for all served traffic;
-* ``submit()`` queues a request and returns a future — a dispatcher thread
+* ``warmup()`` pre-compiles one program per (sampler, bucket) through the
+  same :class:`TabularGenerator` facade that serves requests — warmed
+  programs can't diverge from served ones;
+* ``submit()`` queues a request and returns a future; the scheduler
   coalesces concurrent same-sampler requests into one bucketed device
-  dispatch (micro-batching), so many small callers share one program launch.
+  dispatch **and keeps admitting the next batch while the current one is
+  in flight** (a waiter thread resolves futures — queue wait no longer
+  stacks on device time);
+* ``generate()`` stays synchronous and exactly per-(n, seed) deterministic;
+* unknown sampler names raise ``ValueError`` at ``submit()``/``generate()``
+  time, to the caller — not inside the dispatcher after a wasted dispatch;
+* ``stats`` carries per-sampler splits and a queue-wait vs device-time
+  breakdown next to the PR-4 aggregate counters.
 
 CPU demo (fits a small model, saves, loads, serves):
 
@@ -30,266 +37,150 @@ Serving a trained model across 8 virtual devices:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
-import queue
 import tempfile
-import threading
 import time
 from concurrent.futures import Future
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.tabgen import (ForestArtifacts, TabularGenerator, default_sampler,
-                          sample_labels)
-from repro.tabgen.sampling import resolve_mesh
-
-DEFAULT_BUCKETS = (64, 256, 1024)
-
-#: Seed base of the micro-batched path: coalesced batches draw their own
-#: sample seeds from a server-local counter offset far from the ones users
-#: hand to ``generate(seed=...)``, so the two paths never collide in the
-#: label-draw RNG space.
-_BATCH_SEED_BASE = 1 << 20
-
-
-@dataclasses.dataclass
-class _Request:
-    n: int
-    sampler: str
-    future: Future
-
-
-_SHUTDOWN = object()
+from repro.serving import (AdmissionController, InflightScheduler,
+                           ModelRegistry)
+from repro.serving.registry import DEFAULT_BUCKETS  # noqa: F401 — re-export
+from repro.serving.scheduler import Request as _Request  # noqa: F401
+from repro.tabgen import ForestArtifacts, TabularGenerator
 
 
 class ForestServer:
-    """Single-host tabular-generation server over loaded artifacts.
+    """Single-host, single-model tabular-generation server.
 
-    ``warmup()`` pre-compiles one sampler program per (sampler, bucket);
-    ``generate()`` buckets the request, reuses the cached program, and
-    accounts rows/sec — all through the :class:`TabularGenerator` facade,
-    the same code path as every other consumer (warmed programs can't
-    diverge from served ones). ``submit()`` is the concurrent front end:
-    requests land on a queue and a dispatcher thread coalesces them into
-    micro-batches. Stats counters are guarded by a lock, so concurrent
-    submitters and the dispatcher can't lose updates.
-
-    Micro-batch semantics: coalesced requests share one shuffled sample, so
-    each request gets an exchangeable random slice — per-request label
-    proportions are approximate within a batch (law of large numbers), while
-    the synchronous ``generate()`` path keeps exact per-(n, seed) determinism.
+    A convenience wrapper: one registered model named ``"default"``, the
+    in-flight scheduler underneath. Reach into ``server.registry`` /
+    ``server.scheduler`` for the multi-model and admission knobs (e.g.
+    ``server.registry.swap("default", new_artifacts)`` for a zero-downtime
+    artifact hot-swap).
     """
+
+    MODEL = "default"
 
     def __init__(self, artifacts: ForestArtifacts, *,
                  samplers: Sequence[str] = (),
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  schema=None, mesh=None, impl: Optional[str] = None,
                  max_coalesce_rows: Optional[int] = None,
-                 coalesce_window_s: float = 0.002):
-        cfg = artifacts.config
-        self.mesh = resolve_mesh(mesh)
-        if self.mesh is not None:
-            # place the class-sharded arrays once; every request reuses them
-            artifacts = artifacts.shard(self.mesh)
-        self.artifacts = artifacts
-        self.schema = schema
+                 coalesce_window_s: float = 0.002,
+                 inflight_depth: int = 2,
+                 sync_resolve: bool = False,
+                 admission: Optional[AdmissionController] = None):
+        self.registry = ModelRegistry(mesh=mesh, impl=impl, buckets=buckets)
+        self.registry.register(self.MODEL, artifacts, schema=schema,
+                               samplers=samplers)
+        self.scheduler = InflightScheduler(
+            self.registry, admission,
+            max_coalesce_rows=max_coalesce_rows,
+            coalesce_window_s=coalesce_window_s,
+            inflight_depth=inflight_depth, sync_resolve=sync_resolve)
+        self.mesh = self.registry.mesh
         self.impl = impl
-        self.samplers = tuple(samplers) or (
-            default_sampler(cfg.method, cfg.diff_sampler),)
-        self.buckets = tuple(sorted(buckets))
-        # default row cap = the largest bucket: coalescing past it would
-        # push the merged batch into oversize exact-size territory and
-        # compile a fresh program per distinct total — the opposite of what
-        # micro-batching is for (worst per-class slice <= total rows, so
-        # capping totals at the bucket keeps pad_to inside warmed programs)
-        self.max_coalesce_rows = int(max_coalesce_rows or max(self.buckets))
-        self.coalesce_window_s = float(coalesce_window_s)
-        self.stats: Dict[str, float] = {
-            "requests": 0, "rows": 0, "gen_s": 0.0, "warm_s": 0.0,
-            "batches": 0, "coalesced_requests": 0}
-        self._stats_lock = threading.Lock()
-        self._batch_seed = 0
-        # requests delegate to the facade so server output can never
-        # diverge from TabularGenerator's (schema decode, impute masking)
-        self._gen = TabularGenerator(cfg, schema=schema)
-        self._gen.artifacts = artifacts
-        self._queue: "queue.Queue" = queue.Queue()
-        self._dispatcher: Optional[threading.Thread] = None
-        self._lifecycle_lock = threading.Lock()
+        self.schema = schema
 
     @classmethod
     def from_path(cls, path: str, **kw) -> "ForestServer":
         gen = TabularGenerator.load(path)
         return cls(gen.artifacts, schema=gen.schema, **kw)
 
+    # -- model-facing views --------------------------------------------------
+
+    @property
+    def _handle(self):
+        return self.registry.peek(self.MODEL)
+
+    @property
+    def artifacts(self) -> ForestArtifacts:
+        return self._handle.artifacts
+
+    @property
+    def samplers(self) -> Tuple[str, ...]:
+        return self._handle.samplers
+
+    @property
+    def buckets(self) -> Tuple[int, ...]:
+        return self._handle.buckets
+
+    @property
+    def max_coalesce_rows(self) -> int:
+        return self.scheduler.max_coalesce_rows
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        return self.scheduler.stats
+
     # -- request path -------------------------------------------------------
 
-    def _bucket(self, n: int, seed: int) -> int:
-        """Smallest bucket covering the largest per-class slice of an
-        ``n``-row request. Exact: replays the (cheap, deterministic) label
-        draw that ``sample`` will make for this (n, seed)."""
-        rng = np.random.default_rng(seed)
-        label_idx = sample_labels(np.asarray(self.artifacts.counts), n, rng,
-                                  self.artifacts.config.label_sampler)
-        worst = int(np.bincount(label_idx,
-                                minlength=self.artifacts.n_y).max())
-        for b in self.buckets:
-            if b >= worst:
-                return b
-        return worst  # oversize request: exact (compiles once per size)
-
-    def _generate_raw(self, n: int, sampler: str, seed: int,
-                      pad_to: int) -> Tuple[np.ndarray, np.ndarray]:
-        """THE serving dispatch: facade + this server's mesh/impl. Warmup,
-        ``generate()``, and the micro-batcher all go through here, so they
-        share one jit cache by construction."""
-        return self._gen.generate(n, sampler=sampler, seed=seed,
-                                  pad_to=pad_to, mesh=self.mesh,
-                                  impl=self.impl)
+    def _validate_sampler(self, sampler: Optional[str]) -> str:
+        name = sampler or self.samplers[0]
+        if name not in self.samplers:
+            raise ValueError(
+                f"server does not serve sampler {name!r}; "
+                f"served: {list(self.samplers)}")
+        return name
 
     def warmup(self) -> float:
         """Compile every (sampler, bucket) program; returns wall seconds."""
-        t0 = time.time()
-        for name in self.samplers:
-            for b in self.buckets:
-                n = min(b, int(np.asarray(self.artifacts.counts).sum()))
-                self._generate_raw(max(n, 1), name, seed=0, pad_to=b)
-        dt = time.time() - t0
-        with self._stats_lock:
-            self.stats["warm_s"] += dt
+        dt = self.registry.warmup(self.MODEL)
+        self.scheduler.record_warm(dt)
         return dt
 
     def generate(self, n: int, *, sampler: Optional[str] = None,
                  seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
         """Synchronous path: exact per-(n, seed) deterministic output."""
-        name = sampler or self.samplers[0]
-        t0 = time.time()
-        X, y = self._generate_raw(n, name, seed=seed,
-                                  pad_to=self._bucket(n, seed))
-        dt = time.time() - t0
-        with self._stats_lock:
-            self.stats["requests"] += 1
-            self.stats["rows"] += n
-            self.stats["gen_s"] += dt
-            self.stats["batches"] += 1
+        name = self._validate_sampler(sampler)
+        handle = self.registry.acquire(self.MODEL)
+        t0 = time.monotonic()
+        X, y = handle.generate(n, name, seed=seed)
+        self.scheduler.record_sync(n=n, sampler=name, tenant="default",
+                                   wall_s=time.monotonic() - t0)
         return X, y
 
-    # -- concurrent front end ----------------------------------------------
-
-    def _start_locked(self) -> None:
-        if self._dispatcher is None or not self._dispatcher.is_alive():
-            self._dispatcher = threading.Thread(
-                target=self._dispatch_loop, name="forest-serve-dispatch",
-                daemon=True)
-            self._dispatcher.start()
-
-    def start(self) -> None:
-        """Start the dispatcher thread (idempotent; ``submit`` auto-starts)."""
-        with self._lifecycle_lock:
-            self._start_locked()
-
-    def stop(self, timeout: float = 10.0) -> None:
-        """Drain the queue and stop the dispatcher thread."""
-        with self._lifecycle_lock:
-            if self._dispatcher is None:
-                return
-            self._queue.put(_SHUTDOWN)
-            self._dispatcher.join(timeout)
-            self._dispatcher = None
-
-    def submit(self, n: int, *, sampler: Optional[str] = None) -> Future:
+    def submit(self, n: int, *, sampler: Optional[str] = None,
+               tenant: str = "default", priority: str = "interactive",
+               deadline_s: Optional[float] = None) -> Future:
         """Queue a generation request; resolves to ``(X, y)``.
 
-        Concurrent submissions coalesce: the dispatcher waits up to
-        ``coalesce_window_s`` for more same-sampler requests (bounded by
-        ``max_coalesce_rows``, default: the largest bucket) and serves the
-        whole group from a single bucketed device dispatch.
+        Concurrent submissions coalesce into shared device dispatches, and
+        the next batch is admitted while the current one is in flight.
+        Unknown samplers raise ``ValueError`` here; admission rejections
+        (when the server was built with rate limits / tight queue bounds)
+        raise ``RateLimited`` / ``QueueFull`` here too.
         """
-        fut: Future = Future()
-        # enqueue under the lifecycle lock: a submit racing with stop()
-        # could otherwise land its request *behind* the shutdown sentinel
-        # with no dispatcher left to serve it — the lock serialises the two,
-        # so the request either precedes the sentinel or gets a fresh thread
-        with self._lifecycle_lock:
-            self._start_locked()
-            self._queue.put(_Request(int(n), sampler or self.samplers[0],
-                                     fut))
-        return fut
+        return self.scheduler.submit(
+            int(n), model=self.MODEL,
+            sampler=self._validate_sampler(sampler),
+            tenant=tenant, priority=priority, deadline_s=deadline_s)
 
-    def _dispatch_loop(self) -> None:
-        carry = None          # request that closed the previous batch
-        while True:
-            req = carry if carry is not None else self._queue.get()
-            carry = None
-            if req is _SHUTDOWN:
-                return
-            batch, rows = [req], req.n
-            deadline = time.monotonic() + self.coalesce_window_s
-            while rows < self.max_coalesce_rows:
-                left = deadline - time.monotonic()
-                if left <= 0:
-                    break
-                try:
-                    nxt = self._queue.get(timeout=left)
-                except queue.Empty:
-                    break
-                if (nxt is _SHUTDOWN or nxt.sampler != req.sampler
-                        or rows + nxt.n > self.max_coalesce_rows):
-                    # different program, shutdown, or the request would push
-                    # the merged total past the cap (-> oversize exact-size
-                    # compile): it opens the next batch instead
-                    carry = nxt
-                    break
-                batch.append(nxt)
-                rows += nxt.n
-            self._serve_batch(batch)
-            if carry is _SHUTDOWN:
-                return
+    def start(self) -> None:
+        """Start the scheduler threads (idempotent; ``submit`` auto-starts)."""
+        self.scheduler.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Drain the queue and stop the scheduler threads."""
+        self.scheduler.stop(timeout)
 
     def _serve_batch(self, batch) -> None:
-        """One coalesced device dispatch; split rows back per request."""
-        # claim each future first: a client that cancelled while queued is
-        # dropped here — set_result on a cancelled Future raises and would
-        # otherwise kill the dispatcher thread, stranding the whole batch
-        batch = [r for r in batch if r.future.set_running_or_notify_cancel()]
-        if not batch:
-            return
-        total = sum(r.n for r in batch)
-        with self._stats_lock:
-            seed = _BATCH_SEED_BASE + self._batch_seed
-            self._batch_seed += 1
-        t0 = time.time()
-        try:
-            X, y = self._generate_raw(total, batch[0].sampler, seed=seed,
-                                      pad_to=self._bucket(total, seed))
-        except BaseException as exc:  # noqa: BLE001 — delivered via futures
-            for r in batch:
-                r.future.set_exception(exc)
-            return
-        dt = time.time() - t0
-        off = 0
-        for r in batch:
-            r.future.set_result((X[off:off + r.n], y[off:off + r.n]))
-            off += r.n
-        with self._stats_lock:
-            self.stats["requests"] += len(batch)
-            self.stats["rows"] += total
-            self.stats["gen_s"] += dt
-            self.stats["batches"] += 1
-            self.stats["coalesced_requests"] += len(batch) - 1
+        """Dispatch + resolve one pre-formed batch synchronously (test seam
+        kept from PR 4; production traffic goes through ``submit``)."""
+        self.scheduler.serve_batch_sync(batch)
 
     # -- misc ---------------------------------------------------------------
 
     def impute(self, X_missing, y=None, *, seed: int = 0,
                refine_rounds: int = 3) -> np.ndarray:
-        return self._gen.impute(X_missing, y, seed=seed,
-                                refine_rounds=refine_rounds, impl=self.impl)
+        return self.registry.acquire(self.MODEL).impute(
+            X_missing, y, seed=seed, refine_rounds=refine_rounds)
 
     def rows_per_sec(self) -> float:
-        with self._stats_lock:
-            return self.stats["rows"] / max(self.stats["gen_s"], 1e-9)
+        return self.scheduler.rows_per_sec()
 
 
 # ---------------------------------------------------------------------------
@@ -326,6 +217,9 @@ def main():
     ap.add_argument("--sync", action="store_true",
                     help="serve via the synchronous generate() path instead "
                          "of the micro-batching queue")
+    ap.add_argument("--drain", action="store_true",
+                    help="disable in-flight batching (PR-4 drain-then-serve "
+                         "reference behavior)")
     ap.add_argument("--coalesce-window-ms", type=float, default=2.0)
     args = ap.parse_args()
 
@@ -340,7 +234,8 @@ def main():
     server = ForestServer.from_path(
         path, samplers=samplers, buckets=buckets,
         mesh=parse_mesh(args.mesh), impl=args.impl,
-        coalesce_window_s=args.coalesce_window_ms / 1e3)
+        coalesce_window_s=args.coalesce_window_ms / 1e3,
+        sync_resolve=args.drain)
     warm = server.warmup()
     print(f"warmed {len(server.samplers)} sampler(s) x {len(buckets)} "
           f"bucket(s) in {warm:.2f}s"
@@ -362,7 +257,8 @@ def main():
     print(f"served {int(s['requests'])} requests / {int(s['rows'])} rows "
           f"in {int(s['batches'])} dispatch(es) "
           f"({int(s['coalesced_requests'])} coalesced) "
-          f"in {s['gen_s']:.3f}s -> {server.rows_per_sec():.0f} rows/sec")
+          f"in {s['gen_s']:.3f}s -> {server.rows_per_sec():.0f} rows/sec; "
+          f"queue-wait {s['queue_wait_s']:.3f}s vs device {s['device_s']:.3f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,316 @@
+"""Stdlib-only HTTP front end over the :mod:`repro.serving` control plane.
+
+Drives the heavy-traffic story end to end: many named models hot in one
+process (LRU device placement), interactive/bulk priority classes,
+per-tenant rate limits with explicit backpressure, in-flight micro-batched
+dispatch — all behind five endpoints:
+
+  POST /v1/generate   {"model": "demo", "n": 128, "sampler": "euler",
+                       "tenant": "t0", "priority": "interactive",
+                       "deadline_ms": 500, "timeout_s": 60}
+      -> 200 {"model", "version", "n", "rows", "labels",
+              "queue_wait_ms_total": ...}
+      -> 400 bad arguments / unknown sampler     (ValueError, eager)
+      -> 404 unknown model
+      -> 429 + Retry-After header                (RateLimited / QueueFull)
+      -> 504 deadline exceeded before dispatch
+  POST /v1/impute     {"model": "demo", "rows": [[1.0, null, ...]],
+                       "labels": [...]}   — null marks a missing cell;
+      served synchronously (bridge-clamped solve is per-row conditional,
+      not micro-batched) but still metered against the tenant's row bucket
+  GET  /v1/models     registry contents: hot/cold, bytes, versions, stats
+  GET  /healthz       {"ok": true} once the plane is serving
+  GET  /statz         scheduler + admission + registry stats (per-sampler,
+                      per-tenant, queue-wait vs device-time breakdown)
+
+Run a demo instance (fits a tiny model, registers it as "demo"):
+
+  PYTHONPATH=src python -m repro.launch.serve_http --demo --port 8099
+
+Multiple models, sharded, with per-tenant limits:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+    python -m repro.launch.serve_http --model calo=calo_model \
+      --model fraud=fraud_model --mesh 4x2 --rate 500000 --burst 2000000
+
+The server prints ``serving on http://HOST:PORT`` once ready (``--port 0``
+binds an ephemeral port — the line is the machine-readable contract the CI
+smoke and the tests parse).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.serving import (AdmissionController, DeadlineExceeded,
+                           InflightScheduler, ModelRegistry, QueueFull,
+                           RateLimited, UnknownModel)
+
+
+class ServingApp:
+    """The control plane bundle the HTTP handler dispatches into.
+
+    Framework-free by design: tests drive it in-process, the CLI wraps it
+    in a :class:`ThreadingHTTPServer`.
+    """
+
+    def __init__(self, registry: ModelRegistry,
+                 admission: Optional[AdmissionController] = None, *,
+                 coalesce_window_s: float = 0.002,
+                 max_coalesce_rows: Optional[int] = None,
+                 default_timeout_s: float = 300.0):
+        self.registry = registry
+        self.admission = admission or AdmissionController()
+        self.scheduler = InflightScheduler(
+            registry, self.admission,
+            coalesce_window_s=coalesce_window_s,
+            max_coalesce_rows=max_coalesce_rows)
+        self.default_timeout_s = float(default_timeout_s)
+
+    # -- endpoint bodies (status_code, payload) ------------------------------
+
+    def generate(self, body: dict) -> Tuple[int, dict]:
+        try:
+            n = int(body.get("n", 0))
+            if n <= 0:
+                raise ValueError(f"n={body.get('n')!r}: need a positive row count")
+            model = str(body.get("model", "default"))
+            deadline_ms = body.get("deadline_ms")
+            fut = self.scheduler.submit(
+                n, model=model, sampler=body.get("sampler"),
+                tenant=str(body.get("tenant", "default")),
+                priority=str(body.get("priority", "interactive")),
+                deadline_s=None if deadline_ms is None
+                else float(deadline_ms) / 1e3)
+        except UnknownModel:
+            return 404, {"error": f"unknown model {body.get('model')!r}",
+                         "models": self.registry.names()}
+        except (RateLimited, QueueFull) as exc:
+            return 429, {"error": str(exc),
+                         "retry_after_s": exc.retry_after_s}
+        except (ValueError, TypeError) as exc:
+            return 400, {"error": str(exc)}
+        try:
+            X, y = fut.result(timeout=float(
+                body.get("timeout_s", self.default_timeout_s)))
+        except DeadlineExceeded as exc:
+            return 504, {"error": str(exc)}
+        handle = self.registry.peek(model)
+        return 200, {"model": model, "version": handle.version, "n": n,
+                     "rows": np.asarray(X).tolist(),
+                     "labels": np.asarray(y).tolist()}
+
+    def impute(self, body: dict) -> Tuple[int, dict]:
+        try:
+            rows = body.get("rows")
+            if not rows:
+                raise ValueError("rows: need a non-empty list of rows "
+                                 "(null marks a missing cell)")
+            X = np.array([[np.nan if v is None else float(v) for v in row]
+                          for row in rows])
+            y = body.get("labels")
+            model = str(body.get("model", "default"))
+            tenant = str(body.get("tenant", "default"))
+            handle = self.registry.peek(model)  # 404 before metering
+            if y is None and handle.artifacts.n_y > 1:
+                raise ValueError(
+                    f"model {model!r} is class-conditional "
+                    f"({handle.artifacts.n_y} classes): imputation needs "
+                    "\"labels\"")
+            self.admission.charge(tenant, len(X))
+            handle = self.registry.acquire(model)
+            filled = handle.impute(
+                X, None if y is None else np.asarray(y),
+                seed=int(body.get("seed", 0)),
+                refine_rounds=int(body.get("refine_rounds", 3)))
+        except UnknownModel:
+            return 404, {"error": f"unknown model {body.get('model')!r}",
+                         "models": self.registry.names()}
+        except RateLimited as exc:
+            return 429, {"error": str(exc),
+                         "retry_after_s": exc.retry_after_s}
+        except (ValueError, TypeError) as exc:
+            return 400, {"error": str(exc)}
+        return 200, {"model": model, "version": handle.version,
+                     "rows": np.asarray(filled).tolist()}
+
+    def models(self) -> Tuple[int, dict]:
+        return 200, {"models": self.registry.describe(),
+                     "hot": self.registry.hot_names()}
+
+    def healthz(self) -> Tuple[int, dict]:
+        return 200, {"ok": True, "models": self.registry.names()}
+
+    def statz(self) -> Tuple[int, dict]:
+        return 200, {"scheduler": self.scheduler.stats_snapshot(),
+                     "admission": self.admission.stats_snapshot(),
+                     "registry": self.registry.stats_snapshot()}
+
+    def stop(self) -> None:
+        self.scheduler.stop()
+
+
+def make_handler(app: ServingApp, *, quiet: bool = True):
+    class Handler(BaseHTTPRequestHandler):
+        server_version = "repro-serving/1.0"
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, fmt, *args):  # noqa: A003
+            if not quiet:
+                BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+        def _reply(self, status: int, payload: dict,
+                   retry_after: Optional[float] = None) -> None:
+            blob = json.dumps(payload).encode()
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(blob)))
+            if retry_after is not None:
+                self.send_header("Retry-After", f"{retry_after:.3f}")
+            self.end_headers()
+            self.wfile.write(blob)
+
+        def do_GET(self):  # noqa: N802
+            routes = {"/healthz": app.healthz, "/statz": app.statz,
+                      "/v1/models": app.models}
+            fn = routes.get(self.path)
+            if fn is None:
+                self._reply(404, {"error": f"no route {self.path!r}",
+                                  "routes": sorted(routes)})
+                return
+            self._reply(*fn())
+
+        def do_POST(self):  # noqa: N802
+            routes = {"/v1/generate": app.generate, "/v1/impute": app.impute}
+            fn = routes.get(self.path)
+            if fn is None:
+                self._reply(404, {"error": f"no route {self.path!r}",
+                                  "routes": sorted(routes)})
+                return
+            try:
+                length = int(self.headers.get("Content-Length", 0))
+                body = json.loads(self.rfile.read(length) or b"{}")
+                if not isinstance(body, dict):
+                    raise ValueError("body must be a JSON object")
+            except (ValueError, json.JSONDecodeError) as exc:
+                self._reply(400, {"error": f"bad JSON body: {exc}"})
+                return
+            status, payload = fn(body)
+            self._reply(status, payload,
+                        retry_after=payload.get("retry_after_s")
+                        if status == 429 else None)
+
+    return Handler
+
+
+def make_server(app: ServingApp, host: str = "127.0.0.1",
+                port: int = 0, *, quiet: bool = True) -> ThreadingHTTPServer:
+    """Bind (port 0 = ephemeral); caller runs ``serve_forever``."""
+    return ThreadingHTTPServer((host, port), make_handler(app, quiet=quiet))
+
+
+def serve_in_thread(app: ServingApp, host: str = "127.0.0.1",
+                    port: int = 0) -> Tuple[ThreadingHTTPServer, threading.Thread]:
+    """In-process server for tests: returns (httpd, daemon thread)."""
+    httpd = make_server(app, host, port)
+    t = threading.Thread(target=httpd.serve_forever, daemon=True,
+                         name="serve-http")
+    t.start()
+    return httpd, t
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", action="append", default=[],
+                    metavar="NAME=PATH",
+                    help="register a saved artifact pair under NAME "
+                         "(repeatable)")
+    ap.add_argument("--demo", action="store_true",
+                    help="fit+register a small two-moons model as 'demo'")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8099,
+                    help="0 binds an ephemeral port (printed when ready)")
+    ap.add_argument("--buckets", default="64,256,1024")
+    ap.add_argument("--mesh", default="none",
+                    help="'auto' | 'none' | DxM — shard every model's solve")
+    ap.add_argument("--impl", default=None,
+                    help="tree-predict backend: xla | pallas | pallas_interpret")
+    ap.add_argument("--device-budget-mb", type=float, default=None,
+                    help="LRU device-placement budget over all hot models")
+    ap.add_argument("--max-hot", type=int, default=None,
+                    help="cap the number of device-placed models")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="default per-tenant rate limit (rows/sec)")
+    ap.add_argument("--burst", type=float, default=None,
+                    help="per-tenant burst size in rows (default 4x rate)")
+    ap.add_argument("--queue-limit-interactive", type=int, default=256)
+    ap.add_argument("--queue-limit-bulk", type=int, default=1024)
+    ap.add_argument("--coalesce-window-ms", type=float, default=2.0)
+    ap.add_argument("--no-warm", action="store_true",
+                    help="skip the (sampler, bucket) warmup compile pass")
+    ap.add_argument("--verbose", action="store_true",
+                    help="log one line per HTTP request")
+    args = ap.parse_args(argv)
+
+    specs = []
+    for item in args.model:
+        name, _, path = item.partition("=")
+        if not path:
+            ap.error(f"--model {item!r}: expected NAME=PATH")
+        specs.append((name, path))
+    if args.demo or not specs:
+        from repro.launch.serve_forest import _demo_artifacts
+        path = _demo_artifacts(os.path.join(tempfile.mkdtemp(), "demo"))
+        print(f"demo artifacts saved to {path}", flush=True)
+        specs.append(("demo", path))
+
+    from repro.launch.train_forest import parse_mesh
+    registry = ModelRegistry(
+        mesh=parse_mesh(args.mesh), impl=args.impl,
+        buckets=tuple(int(b) for b in args.buckets.split(",")),
+        device_budget_bytes=None if args.device_budget_mb is None
+        else int(args.device_budget_mb * 2**20),
+        max_hot=args.max_hot)
+    for name, path in specs:
+        registry.register(name, path=path)
+        print(f"registered model {name!r} from {path}", flush=True)
+    admission = AdmissionController(
+        queue_limits={"interactive": args.queue_limit_interactive,
+                      "bulk": args.queue_limit_bulk},
+        default_rate=None if args.rate is None
+        else (args.rate, args.burst or 4 * args.rate))
+    app = ServingApp(registry, admission,
+                     coalesce_window_s=args.coalesce_window_ms / 1e3)
+    if not args.no_warm:
+        print(f"warming {len(specs)} model(s)...", flush=True)
+        dt = registry.warmup()
+        app.scheduler.record_warm(dt)
+        print(f"warmed in {dt:.2f}s", flush=True)
+
+    httpd = make_server(app, args.host, args.port, quiet=not args.verbose)
+    host, port = httpd.server_address[:2]
+    print(f"serving on http://{host}:{port}", flush=True)
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        print("shutting down...", flush=True)
+        httpd.server_close()
+        app.stop()
+        print("bye", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Multi-tenant serving control plane over the tabgen data plane.
+
+Layers (each its own module, composable):
+
+* :mod:`repro.serving.registry`  — :class:`ModelRegistry`: many named
+  :class:`~repro.tabgen.ForestArtifacts` hot per process, LRU device
+  placement under a byte budget, zero-downtime ``swap``.
+* :mod:`repro.serving.admission` — :class:`AdmissionController`:
+  interactive/bulk priority queues, per-tenant row-rate token buckets,
+  bounded queues with reject-and-retry-after, request deadlines.
+* :mod:`repro.serving.scheduler` — :class:`InflightScheduler`: in-flight
+  micro-batching (dispatch batch ``k+1`` while a waiter thread resolves
+  batch ``k``), priority-ordered coalescing, per-sampler / per-tenant
+  stats with queue-wait vs device-time breakdown.
+
+Front ends: :class:`repro.launch.serve_forest.ForestServer` (single-model,
+in-process) and :mod:`repro.launch.serve_http` (multi-model HTTP API).
+"""
+from repro.serving.admission import (  # noqa: F401
+    PRIORITIES, AdmissionController, AdmissionError, DeadlineExceeded,
+    QueueFull, RateLimited, TokenBucket)
+from repro.serving.registry import (  # noqa: F401
+    DEFAULT_BUCKETS, ModelHandle, ModelRegistry, UnknownModel)
+from repro.serving.scheduler import (  # noqa: F401
+    InflightScheduler, Request)

@@ -1,0 +1,241 @@
+"""Admission control: priority/SLO buckets, per-tenant token buckets,
+bounded queues, explicit backpressure.
+
+The PR-4 server queued everything it was handed — under overload the queue
+(and every caller's latency) grew without bound. Here the front door is
+explicit:
+
+* two priority classes, ``interactive`` and ``bulk`` (``PRIORITIES``); the
+  scheduler always drains interactive first, so bulk traffic can saturate
+  the device without moving the interactive tail;
+* per-tenant token buckets metered in *rows* (the unit of device work, not
+  requests — one 4096-row bulk call costs what 64 interactive 64-row calls
+  cost); a tenant over its rate gets :class:`RateLimited` with a concrete
+  ``retry_after_s`` instead of a slot in a queue it will time out of;
+* per-priority bounded queues — a full queue raises :class:`QueueFull`
+  (reject-with-retry-after, the open-loop-load answer to unbounded
+  buffering);
+* per-request deadlines: the scheduler drops a request whose deadline
+  passed *before* spending device time on it and fails its future with
+  :class:`DeadlineExceeded`.
+
+``offer``/``pop``/``pop_matching`` are the scheduler-facing queue API; the
+batch former uses ``pop_matching`` to coalesce same-(model, sampler)
+requests across both priority classes while leaving everything else queued.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional, Tuple
+
+PRIORITIES = ("interactive", "bulk")
+
+#: ``pop()`` returns this once the controller is closed *and* drained —
+#: requests accepted before ``close()`` are always served first.
+CLOSED = object()
+
+
+class AdmissionError(RuntimeError):
+    """Rejected at the door. ``retry_after_s`` tells a well-behaved caller
+    when to come back (the HTTP front end maps it to ``Retry-After``)."""
+
+    def __init__(self, msg: str, retry_after_s: float):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
+
+
+class RateLimited(AdmissionError):
+    """Tenant token bucket empty."""
+
+
+class QueueFull(AdmissionError):
+    """Priority queue at its bound (or the server is shutting down)."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """Request expired while queued; dropped before dispatch."""
+
+
+class TokenBucket:
+    """Rows/sec token bucket with lazy monotonic-clock refill.
+
+    Not thread-safe on its own — the controller serialises access under its
+    condition lock.
+    """
+
+    def __init__(self, rate_rows_per_s: float, burst_rows: float):
+        self.rate = float(rate_rows_per_s)
+        self.burst = float(burst_rows)
+        self.tokens = self.burst
+        self._last = None  # first take() starts the clock
+
+    def take(self, rows: float, now: float) -> Optional[float]:
+        """Consume ``rows`` tokens. Returns ``None`` when granted, else the
+        seconds until enough tokens will have refilled (the request is NOT
+        queued against future tokens — retry-after, not reservation)."""
+        if self._last is None:
+            self._last = now
+        self.tokens = min(self.burst, self.tokens + (now - self._last) * self.rate)
+        self._last = now
+        if rows <= self.tokens:
+            self.tokens -= rows
+            return None
+        deficit = rows - self.tokens
+        return deficit / max(self.rate, 1e-9)
+
+
+class AdmissionController:
+    """The scheduler's front door: rate-limit, bound, and order requests.
+
+    ``tenant_rates`` maps tenant name -> ``(rate_rows_per_s, burst_rows)``;
+    ``default_rate`` (same tuple) applies to tenants without an explicit
+    entry, ``None`` meaning unmetered. ``queue_limits`` bounds the number of
+    queued requests per priority class.
+    """
+
+    DEFAULT_QUEUE_LIMITS = {"interactive": 256, "bulk": 1024}
+
+    def __init__(self, *, queue_limits: Optional[Dict[str, int]] = None,
+                 tenant_rates: Optional[Dict[str, Tuple[float, float]]] = None,
+                 default_rate: Optional[Tuple[float, float]] = None,
+                 clock=time.monotonic):
+        self.queue_limits = dict(self.DEFAULT_QUEUE_LIMITS)
+        self.queue_limits.update(queue_limits or {})
+        self._rates = dict(tenant_rates or {})
+        self._default_rate = default_rate
+        self._buckets: Dict[str, TokenBucket] = {}
+        self._clock = clock
+        self._cond = threading.Condition()
+        self._queues = {p: deque() for p in PRIORITIES}
+        self._closed = False
+        self.stats: Dict[str, dict] = {}  # per-tenant counters
+
+    # -- tenant accounting ---------------------------------------------------
+
+    def _tenant_stats(self, tenant: str) -> dict:
+        return self.stats.setdefault(tenant, {
+            "admitted": 0, "rows": 0, "rejected_rate": 0,
+            "rejected_queue": 0})
+
+    def _bucket_for(self, tenant: str) -> Optional[TokenBucket]:
+        if tenant in self._buckets:
+            return self._buckets[tenant]
+        spec = self._rates.get(tenant, self._default_rate)
+        if spec is None:
+            return None
+        bucket = TokenBucket(*spec)
+        self._buckets[tenant] = bucket
+        return bucket
+
+    def charge(self, tenant: str, rows: int) -> None:
+        """Meter ``rows`` against ``tenant``'s bucket without queueing —
+        the unbatched paths (HTTP ``/v1/impute``) pay for device time too."""
+        with self._cond:
+            bucket = self._bucket_for(tenant)
+            if bucket is not None:
+                retry = bucket.take(rows, self._clock())
+                if retry is not None:
+                    self._tenant_stats(tenant)["rejected_rate"] += 1
+                    raise RateLimited(
+                        f"tenant {tenant!r} over its row rate", retry)
+            st = self._tenant_stats(tenant)
+            st["admitted"] += 1
+            st["rows"] += rows
+
+    # -- queue API (scheduler-facing) ----------------------------------------
+
+    def offer(self, req) -> None:
+        """Admit or reject ``req`` (a scheduler Request). Raises
+        :class:`RateLimited` / :class:`QueueFull`; on success the request is
+        queued and the scheduler woken."""
+        if req.priority not in PRIORITIES:
+            raise ValueError(f"priority={req.priority!r}: "
+                             f"expected one of {PRIORITIES}")
+        with self._cond:
+            if self._closed:
+                raise QueueFull("server is shutting down", 1.0)
+            bucket = self._bucket_for(req.tenant)
+            if bucket is not None:
+                retry = bucket.take(req.n, self._clock())
+                if retry is not None:
+                    self._tenant_stats(req.tenant)["rejected_rate"] += 1
+                    raise RateLimited(
+                        f"tenant {req.tenant!r} over its row rate "
+                        f"({req.n} rows)", retry)
+            q = self._queues[req.priority]
+            limit = self.queue_limits[req.priority]
+            if len(q) >= limit:
+                self._tenant_stats(req.tenant)["rejected_queue"] += 1
+                # no reservation to base an estimate on; one dispatch
+                # window is the cheapest honest hint
+                raise QueueFull(
+                    f"{req.priority} queue at its bound ({limit})", 0.05)
+            st = self._tenant_stats(req.tenant)
+            st["admitted"] += 1
+            st["rows"] += req.n
+            q.append(req)
+            self._cond.notify()
+
+    def pop(self, timeout: Optional[float] = None):
+        """Highest-priority queued request; ``CLOSED`` once closed and
+        drained; ``None`` on timeout."""
+        deadline = None if timeout is None else self._clock() + timeout
+        with self._cond:
+            while True:
+                for p in PRIORITIES:
+                    if self._queues[p]:
+                        return self._queues[p].popleft()
+                if self._closed:
+                    return CLOSED
+                left = (None if deadline is None
+                        else deadline - self._clock())
+                if left is not None and left <= 0:
+                    return None
+                self._cond.wait(left)
+
+    def pop_matching(self, model: str, sampler: str, max_rows: int,
+                     timeout: float = 0.0):
+        """First queued request for the same (model, sampler) whose row
+        count fits ``max_rows`` — scanning interactive before bulk, leaving
+        everything else queued. Blocks up to ``timeout`` for one to arrive;
+        ``None`` when the window closes empty-handed."""
+        deadline = self._clock() + timeout
+        with self._cond:
+            while True:
+                for p in PRIORITIES:
+                    q = self._queues[p]
+                    for i, r in enumerate(q):
+                        if (r.model == model and r.sampler == sampler
+                                and r.n <= max_rows):
+                            del q[i]
+                            return r
+                if self._closed:
+                    return None
+                left = deadline - self._clock()
+                if left <= 0:
+                    return None
+                self._cond.wait(left)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop admitting; already-queued requests still drain via pop()."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def reopen(self) -> None:
+        with self._cond:
+            self._closed = False
+
+    def queued(self) -> Dict[str, int]:
+        with self._cond:
+            return {p: len(q) for p, q in self._queues.items()}
+
+    def stats_snapshot(self) -> dict:
+        with self._cond:
+            return {"queued": {p: len(q) for p, q in self._queues.items()},
+                    "queue_limits": dict(self.queue_limits),
+                    "tenants": {t: dict(s) for t, s in self.stats.items()}}

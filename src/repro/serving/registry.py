@@ -1,0 +1,338 @@
+"""ModelRegistry: many named :class:`ForestArtifacts` hot in one process.
+
+The PR-4 server hosted exactly one model. Production tabular serving is
+many-model by nature (per-detector-layer calorimeter ensembles, per-dataset
+generators), so the registry keeps a name -> model table with:
+
+* **LRU device placement under a byte budget** — "hot" models have their
+  pytree leaves device-placed (``shard(mesh)`` when serving sharded, plain
+  ``device_put`` otherwise); cold models keep host (numpy) leaves and cost
+  no device memory. Promotion pays the one-time placement; when the hot set
+  would exceed ``device_budget_bytes`` (or ``max_hot``), the
+  least-recently-used hot models are demoted back to host.
+* **Immutable dispatch snapshots** — ``acquire()`` returns a
+  :class:`ModelHandle`, a frozen (artifacts, schema, samplers, version)
+  view. A batch dispatched against a handle keeps that exact pytree alive
+  until it resolves, whatever the registry does meanwhile.
+* **Zero-downtime swap** — ``swap(name, artifacts)`` builds and places the
+  new version first, then flips the table pointer under the lock. In-flight
+  batches finish on the old pytree (their handle still references it);
+  every later dispatch sees the new one. No request is ever dropped.
+
+All jit caches key on array *shapes*, not identities, so a swapped-in model
+with the same config reuses the old compiled programs — a swap costs one
+device placement, zero recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tabgen import TabularGenerator, default_sampler
+from repro.tabgen.artifacts import _LEAF_FIELDS, ForestArtifacts
+from repro.tabgen.sampling import resolve_mesh, sample_labels
+
+DEFAULT_BUCKETS = (64, 256, 1024)
+
+
+class UnknownModel(KeyError):
+    """Request named a model the registry doesn't hold (HTTP: 404)."""
+
+
+def _leaves_to_host(artifacts: ForestArtifacts) -> ForestArtifacts:
+    """Demote: pytree leaves become numpy — no device memory held."""
+    return dataclasses.replace(
+        artifacts, **{f: np.asarray(getattr(artifacts, f))
+                      for f in _LEAF_FIELDS})
+
+
+def _leaves_to_device(artifacts: ForestArtifacts, mesh) -> ForestArtifacts:
+    """Promote: one-time placement (the cost a cold model pays on first
+    use). With a mesh this is the sharded serving placement."""
+    if mesh is not None:
+        return artifacts.shard(mesh)
+    return dataclasses.replace(
+        artifacts, **{f: jnp.asarray(getattr(artifacts, f))
+                      for f in _LEAF_FIELDS})
+
+
+def artifacts_nbytes(artifacts: ForestArtifacts) -> int:
+    """Device footprint of one model = sum of its pytree leaves."""
+    return int(sum(getattr(artifacts, f).nbytes for f in _LEAF_FIELDS))
+
+
+class ModelHandle:
+    """Immutable dispatch snapshot of one registered model version.
+
+    Everything the scheduler needs for a batch: the facade (shared jit
+    cache + schema decode), the served sampler set, and the bucket policy.
+    Handles are never mutated — ``swap`` and promotion build new ones — so
+    an in-flight batch's view of the model cannot change underneath it.
+    """
+
+    def __init__(self, name: str, artifacts: ForestArtifacts, *,
+                 schema=None, samplers: Sequence[str] = (),
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 mesh=None, impl: Optional[str] = None, version: int = 1):
+        cfg = artifacts.config
+        self.name = name
+        self.artifacts = artifacts
+        self.schema = schema
+        self.mesh = mesh
+        self.impl = impl
+        self.version = version
+        self.samplers = tuple(samplers) or (
+            default_sampler(cfg.method, cfg.diff_sampler),)
+        self.buckets = tuple(sorted(buckets))
+        self.nbytes = artifacts_nbytes(artifacts)
+        # requests delegate to the facade so serving output can never
+        # diverge from TabularGenerator's (schema decode, impute masking)
+        self._gen = TabularGenerator(cfg, schema=schema)
+        self._gen.artifacts = artifacts
+
+    # -- dispatch ------------------------------------------------------------
+
+    def bucket(self, n: int, seed: int) -> int:
+        """Smallest bucket covering the largest per-class slice of an
+        ``n``-row request. Exact: replays the (cheap, deterministic) label
+        draw that ``sample`` will make for this (n, seed)."""
+        rng = np.random.default_rng(seed)
+        label_idx = sample_labels(np.asarray(self.artifacts.counts), n, rng,
+                                  self.artifacts.config.label_sampler)
+        worst = int(np.bincount(label_idx,
+                                minlength=self.artifacts.n_y).max())
+        for b in self.buckets:
+            if b >= worst:
+                return b
+        return worst  # oversize request: exact (compiles once per size)
+
+    def generate_async(self, n: int, sampler: str, *, seed: int,
+                       pad_to: Optional[int] = None):
+        """Non-blocking dispatch; the scheduler's waiter resolves it."""
+        return self._gen.generate_async(
+            n, sampler=sampler, seed=seed,
+            pad_to=self.bucket(n, seed) if pad_to is None else pad_to,
+            mesh=self.mesh, impl=self.impl)
+
+    def generate(self, n: int, sampler: Optional[str] = None, *,
+                 seed: int = 0, pad_to: Optional[int] = None):
+        return self.generate_async(n, sampler or self.samplers[0],
+                                   seed=seed, pad_to=pad_to).result()
+
+    def impute(self, X_missing, y=None, *, seed: int = 0,
+               refine_rounds: int = 3) -> np.ndarray:
+        return self._gen.impute(X_missing, y, seed=seed,
+                                refine_rounds=refine_rounds, impl=self.impl)
+
+    def warmup(self) -> float:
+        """Compile every (sampler, bucket) program; returns wall seconds."""
+        t0 = time.time()
+        total = int(np.asarray(self.artifacts.counts).sum())
+        for name in self.samplers:
+            for b in self.buckets:
+                self.generate(max(min(b, total), 1), name, seed=0, pad_to=b)
+        return time.time() - t0
+
+
+@dataclasses.dataclass
+class _Entry:
+    handle: ModelHandle
+    host_artifacts: ForestArtifacts   # canonical host copy (survives demote)
+    hot: bool
+    last_used: int
+    stats: dict
+
+
+class ModelRegistry:
+    """Thread-safe name -> model table with LRU device placement.
+
+    ``device_budget_bytes`` caps the summed pytree bytes of hot models
+    (``None`` = unbounded); ``max_hot`` caps their count. ``mesh`` /
+    ``impl`` / ``buckets`` are registry-wide serving defaults applied to
+    every handle (a model registered into a sharded registry is placed via
+    ``shard(mesh)`` on promotion).
+
+    Promotion happens inside ``acquire`` under the registry lock — a cold
+    model's first request pays the placement (and any LRU demotions) before
+    dispatch, which is the explicit cost model: hot models never pay it.
+    """
+
+    def __init__(self, *, mesh=None, impl: Optional[str] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 device_budget_bytes: Optional[int] = None,
+                 max_hot: Optional[int] = None):
+        self.mesh = resolve_mesh(mesh)
+        self.impl = impl
+        self.buckets = tuple(sorted(buckets))
+        self.device_budget_bytes = device_budget_bytes
+        self.max_hot = max_hot
+        self._lock = threading.RLock()
+        self._entries: Dict[str, _Entry] = {}
+        self._seq = 0
+
+    # -- internals (call with the lock held) ---------------------------------
+
+    def _tick(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _hot_bytes(self) -> int:
+        return sum(e.handle.nbytes for e in self._entries.values() if e.hot)
+
+    def _hot_count(self) -> int:
+        return sum(1 for e in self._entries.values() if e.hot)
+
+    def _demote_lru(self, keep: str) -> None:
+        """Demote least-recently-used hot entries until the budget holds.
+        ``keep`` (the entry being promoted/registered) is never demoted —
+        a model larger than the whole budget still gets to serve."""
+        def over():
+            if (self.device_budget_bytes is not None
+                    and self._hot_bytes() > self.device_budget_bytes):
+                return True
+            return self.max_hot is not None and self._hot_count() > self.max_hot
+
+        while over():
+            victims = [(e.last_used, n) for n, e in self._entries.items()
+                       if e.hot and n != keep]
+            if not victims:
+                break
+            _, name = min(victims)
+            entry = self._entries[name]
+            entry.handle = self._build_handle(
+                name, entry.host_artifacts, entry.handle, hot=False)
+            entry.hot = False
+            entry.stats["demotions"] += 1
+
+    def _build_handle(self, name: str, host_artifacts: ForestArtifacts,
+                      like: ModelHandle, *, hot: bool,
+                      version: Optional[int] = None) -> ModelHandle:
+        arts = (_leaves_to_device(host_artifacts, self.mesh) if hot
+                else host_artifacts)
+        return ModelHandle(
+            name, arts, schema=like.schema, samplers=like.samplers,
+            buckets=like.buckets, mesh=self.mesh, impl=self.impl,
+            version=like.version if version is None else version)
+
+    # -- public API ----------------------------------------------------------
+
+    def register(self, name: str, artifacts: Optional[ForestArtifacts] = None,
+                 *, path: Optional[str] = None, schema=None,
+                 samplers: Sequence[str] = (),
+                 buckets: Optional[Sequence[int]] = None,
+                 hot: bool = True) -> ModelHandle:
+        """Add (or replace) a model. ``path`` loads a saved
+        ``TabularGenerator`` artifact pair (schema rides along); ``hot``
+        places it on device immediately (evicting LRU models per budget),
+        else it stays cold until first use."""
+        if artifacts is None:
+            if path is None:
+                raise ValueError("register() needs artifacts or path=")
+            gen = TabularGenerator.load(path)
+            artifacts, schema = gen.artifacts, gen.schema
+        host = _leaves_to_host(artifacts)
+        seed_handle = ModelHandle(
+            name, host, schema=schema, samplers=samplers,
+            buckets=buckets or self.buckets, mesh=self.mesh, impl=self.impl)
+        with self._lock:
+            handle = self._build_handle(name, host, seed_handle, hot=hot)
+            self._entries[name] = _Entry(
+                handle=handle, host_artifacts=host, hot=hot,
+                last_used=self._tick(),
+                stats={"acquires": 0, "promotions": 0, "demotions": 0,
+                       "swaps": 0})
+            if hot:
+                self._demote_lru(keep=name)
+            return handle
+
+    def swap(self, name: str, artifacts: ForestArtifacts, *,
+             schema=None, keep_schema: bool = True) -> ModelHandle:
+        """Zero-downtime replace: the new version is built (and device-
+        placed, when the entry is hot) *before* the table pointer flips, so
+        there is no window where the name is unservable. In-flight batches
+        hold the old handle and finish on the old pytree."""
+        host = _leaves_to_host(artifacts)
+        with self._lock:
+            entry = self._entries.get(name)
+            if entry is None:
+                raise UnknownModel(name)
+            old = entry.handle
+            seed_handle = ModelHandle(
+                name, host, schema=old.schema if keep_schema else schema,
+                samplers=old.samplers, buckets=old.buckets,
+                mesh=self.mesh, impl=self.impl)
+            entry.handle = self._build_handle(
+                name, host, seed_handle, hot=entry.hot,
+                version=old.version + 1)
+            entry.host_artifacts = host
+            entry.last_used = self._tick()
+            entry.stats["swaps"] += 1
+            if entry.hot:
+                self._demote_lru(keep=name)
+            return entry.handle
+
+    def acquire(self, name: str) -> ModelHandle:
+        """Dispatch-time lookup: promote if cold (LRU-evicting under the
+        budget), bump recency, return the immutable handle."""
+        with self._lock:
+            entry = self._entries.get(name)
+            if entry is None:
+                raise UnknownModel(name)
+            if not entry.hot:
+                entry.handle = self._build_handle(
+                    name, entry.host_artifacts, entry.handle, hot=True)
+                entry.hot = True
+                entry.stats["promotions"] += 1
+                self._demote_lru(keep=name)
+            entry.last_used = self._tick()
+            entry.stats["acquires"] += 1
+            return entry.handle
+
+    def peek(self, name: str) -> ModelHandle:
+        """Lookup without promotion or recency bump (request validation)."""
+        with self._lock:
+            entry = self._entries.get(name)
+            if entry is None:
+                raise UnknownModel(name)
+            return entry.handle
+
+    def warmup(self, name: Optional[str] = None) -> float:
+        """Compile every (sampler, bucket) program for one model (or all)."""
+        names = [name] if name is not None else self.names()
+        return sum(self.acquire(n).warmup() for n in names)
+
+    def names(self):
+        with self._lock:
+            return sorted(self._entries)
+
+    def hot_names(self):
+        with self._lock:
+            return sorted(n for n, e in self._entries.items() if e.hot)
+
+    def describe(self) -> dict:
+        """Per-model status for ``/v1/models`` and ``/statz``."""
+        with self._lock:
+            return {
+                name: {
+                    "hot": e.hot,
+                    "nbytes": e.handle.nbytes,
+                    "version": e.handle.version,
+                    "samplers": list(e.handle.samplers),
+                    "buckets": list(e.handle.buckets),
+                    "n_features": e.handle.artifacts.p,
+                    "n_classes": e.handle.artifacts.n_y,
+                    **e.stats,
+                }
+                for name, e in self._entries.items()}
+
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            return {"models": self.describe(),
+                    "hot_bytes": self._hot_bytes(),
+                    "device_budget_bytes": self.device_budget_bytes,
+                    "max_hot": self.max_hot}

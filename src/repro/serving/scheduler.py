@@ -1,0 +1,369 @@
+"""InflightScheduler: admission-controlled micro-batching with in-flight
+dispatch.
+
+The PR-4 ``ForestServer`` dispatcher drained its queue batch-by-batch: form
+a batch, dispatch it, *block on the result*, split rows, repeat. Every
+request therefore waited queue-time + full device-time of everything ahead
+of it, and the device idled while the host unpadded/shuffled/delivered the
+previous batch.
+
+This scheduler splits those roles across two threads, riding the same
+async-dispatch property the PR-3 training pipeline uses (dispatch under jit
+is non-blocking; only materialising the result blocks):
+
+* the **scheduler thread** pops admitted requests (interactive before
+  bulk), coalesces same-(model, sampler) requests within a short window,
+  and *dispatches* the batch — ``ModelHandle.generate_async`` returns as
+  soon as the program is enqueued on the device;
+* the **waiter thread** resolves in-flight batches in dispatch order:
+  block on the device values, unpad/decode, slice rows back per request,
+  deliver futures, account stats.
+
+While the waiter blocks on batch ``k``, the scheduler is already admitting
+and dispatching batch ``k+1`` — the device queue stays fed, so queue wait
+no longer stacks on device time. ``inflight_depth`` bounds how many
+dispatched-but-unresolved batches may exist (backpressure against flooding
+the device queue); ``sync_resolve=True`` degrades to the PR-4
+drain-then-serve loop (kept as the benchmark reference arm).
+
+Request lifecycle: ``submit()`` validates eagerly (unknown model / sampler
+raise to the *caller*, not into a future after a wasted dispatch), the
+admission controller rate-limits and bounds queues
+(:class:`~repro.serving.admission.RateLimited` /
+:class:`~repro.serving.admission.QueueFull`), expired deadlines fail with
+:class:`~repro.serving.admission.DeadlineExceeded` before any device time
+is spent, and cancelled futures are dropped at batch-claim time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional
+
+from repro.serving.admission import (CLOSED, AdmissionController,
+                                     DeadlineExceeded)
+from repro.serving.registry import ModelRegistry, UnknownModel  # noqa: F401
+
+#: Seed base of the micro-batched path: coalesced batches draw their own
+#: sample seeds from a scheduler-local counter offset far from the ones
+#: users hand to ``generate(seed=...)``, so the two paths never collide in
+#: the label-draw RNG space.
+BATCH_SEED_BASE = 1 << 20
+
+_SHUTDOWN = object()
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request. The first three fields keep the PR-4
+    ``_Request(n, sampler, future)`` positional layout."""
+    n: int
+    sampler: str
+    future: Future
+    model: str = "default"
+    tenant: str = "default"
+    priority: str = "interactive"
+    enqueued_s: float = dataclasses.field(default_factory=time.monotonic)
+    deadline_s: Optional[float] = None  # absolute time.monotonic()
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """A dispatched-but-unresolved batch travelling to the waiter."""
+    handle: object            # ModelHandle snapshot the batch runs on
+    sample: object            # SampleHandle / _DecodingHandle
+    batch: List[Request]
+    total_rows: int
+    t_dispatch: float
+
+
+def _new_stats() -> dict:
+    return {
+        "requests": 0, "rows": 0, "gen_s": 0.0, "warm_s": 0.0,
+        "batches": 0, "coalesced_requests": 0,
+        "queue_wait_s": 0.0, "device_s": 0.0,
+        "dropped_deadline": 0, "max_inflight_observed": 0,
+        "per_sampler": {}, "per_tenant": {},
+    }
+
+
+def _sampler_slot(stats: dict, sampler: str) -> dict:
+    return stats["per_sampler"].setdefault(sampler, {
+        "requests": 0, "rows": 0, "batches": 0,
+        "queue_wait_s": 0.0, "device_s": 0.0})
+
+
+def _tenant_slot(stats: dict, tenant: str) -> dict:
+    return stats["per_tenant"].setdefault(tenant, {
+        "requests": 0, "rows": 0, "queue_wait_s": 0.0})
+
+
+class InflightScheduler:
+    def __init__(self, registry: ModelRegistry,
+                 admission: Optional[AdmissionController] = None, *,
+                 max_coalesce_rows: Optional[int] = None,
+                 coalesce_window_s: float = 0.002,
+                 inflight_depth: int = 2,
+                 sync_resolve: bool = False):
+        self.registry = registry
+        self.admission = admission or AdmissionController()
+        # default row cap = the largest bucket: coalescing past it would
+        # push the merged batch into oversize exact-size territory and
+        # compile a fresh program per distinct total — the opposite of what
+        # micro-batching is for
+        self.max_coalesce_rows = int(max_coalesce_rows
+                                     or max(registry.buckets))
+        self.coalesce_window_s = float(coalesce_window_s)
+        self.inflight_depth = int(inflight_depth)
+        self.sync_resolve = bool(sync_resolve)
+        self.stats = _new_stats()
+        self._stats_lock = threading.Lock()
+        self._batch_seed = 0
+        self._inflight = 0
+        self._inflight_q: "queue.Queue" = queue.Queue(maxsize=self.inflight_depth)
+        self._scheduler_t: Optional[threading.Thread] = None
+        self._waiter_t: Optional[threading.Thread] = None
+        self._lifecycle_lock = threading.Lock()
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, n: int, *, model: str = "default",
+               sampler: Optional[str] = None, tenant: str = "default",
+               priority: str = "interactive",
+               deadline_s: Optional[float] = None) -> Future:
+        """Queue a generation request; resolves to ``(X, y)``.
+
+        Validation is eager: an unknown model raises
+        :class:`~repro.serving.registry.UnknownModel` and a sampler the
+        model doesn't serve raises :class:`ValueError` here, to the caller —
+        never inside the dispatcher after a wasted dispatch attempt.
+        Admission rejections (:class:`RateLimited` / :class:`QueueFull`)
+        also raise here: explicit backpressure, not unbounded queueing.
+        ``deadline_s`` is a *relative* SLO; a request still queued when it
+        lapses fails with :class:`DeadlineExceeded` before dispatch.
+        """
+        handle = self.registry.peek(model)
+        name = sampler or handle.samplers[0]
+        if name not in handle.samplers:
+            raise ValueError(
+                f"model {model!r} does not serve sampler {name!r}; "
+                f"served: {list(handle.samplers)}")
+        now = time.monotonic()
+        req = Request(int(n), name, Future(), model=model, tenant=tenant,
+                      priority=priority, enqueued_s=now,
+                      deadline_s=None if deadline_s is None
+                      else now + float(deadline_s))
+        # enqueue under the lifecycle lock: a submit racing with stop()
+        # could otherwise land behind the close with no threads left to
+        # serve it — the lock serialises the two, so the request either
+        # precedes the drain or gets fresh threads
+        with self._lifecycle_lock:
+            self._start_locked()
+            self.admission.offer(req)
+        return req.future
+
+    def start(self) -> None:
+        with self._lifecycle_lock:
+            self._start_locked()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Drain admitted requests, then stop both threads."""
+        with self._lifecycle_lock:
+            if self._scheduler_t is None:
+                return
+            self.admission.close()
+            self._scheduler_t.join(timeout)
+            if self._waiter_t is not None:
+                self._waiter_t.join(timeout)
+            self._scheduler_t = None
+            self._waiter_t = None
+
+    def rows_per_sec(self) -> float:
+        with self._stats_lock:
+            return self.stats["rows"] / max(self.stats["gen_s"], 1e-9)
+
+    def stats_snapshot(self) -> dict:
+        with self._stats_lock:
+            out = dict(self.stats)
+            out["per_sampler"] = {k: dict(v)
+                                  for k, v in self.stats["per_sampler"].items()}
+            out["per_tenant"] = {k: dict(v)
+                                 for k, v in self.stats["per_tenant"].items()}
+            out["inflight"] = self._inflight
+            return out
+
+    # -- bookkeeping shared with the synchronous server path -----------------
+
+    def record_warm(self, wall_s: float) -> None:
+        with self._stats_lock:
+            self.stats["warm_s"] += wall_s
+
+    def record_sync(self, *, n: int, sampler: str, tenant: str,
+                    wall_s: float) -> None:
+        """Account a synchronous ``generate()`` served outside the queue
+        (one request = one batch, zero queue wait)."""
+        with self._stats_lock:
+            self.stats["requests"] += 1
+            self.stats["rows"] += n
+            self.stats["gen_s"] += wall_s
+            self.stats["device_s"] += wall_s
+            self.stats["batches"] += 1
+            slot = _sampler_slot(self.stats, sampler)
+            slot["requests"] += 1
+            slot["rows"] += n
+            slot["batches"] += 1
+            slot["device_s"] += wall_s
+            ten = _tenant_slot(self.stats, tenant)
+            ten["requests"] += 1
+            ten["rows"] += n
+
+    # -- threads -------------------------------------------------------------
+
+    def _start_locked(self) -> None:
+        if self._scheduler_t is None or not self._scheduler_t.is_alive():
+            self.admission.reopen()
+            self._scheduler_t = threading.Thread(
+                target=self._scheduler_loop, name="serving-scheduler",
+                daemon=True)
+            self._scheduler_t.start()
+        if not self.sync_resolve and (
+                self._waiter_t is None or not self._waiter_t.is_alive()):
+            self._waiter_t = threading.Thread(
+                target=self._waiter_loop, name="serving-waiter", daemon=True)
+            self._waiter_t.start()
+
+    def _expired(self, req: Request, now: Optional[float] = None) -> bool:
+        """Drop a deadline-lapsed request before dispatch; True if dropped."""
+        if req.deadline_s is None:
+            return False
+        now = time.monotonic() if now is None else now
+        if now <= req.deadline_s:
+            return False
+        if req.future.set_running_or_notify_cancel():
+            req.future.set_exception(DeadlineExceeded(
+                f"deadline lapsed {now - req.deadline_s:.3f}s ago while "
+                "queued"))
+        with self._stats_lock:
+            self.stats["dropped_deadline"] += 1
+        return True
+
+    def _scheduler_loop(self) -> None:
+        while True:
+            req = self.admission.pop(timeout=0.1)
+            if req is CLOSED:
+                if not self.sync_resolve:
+                    self._inflight_q.put(_SHUTDOWN)
+                return
+            if req is None or self._expired(req):
+                continue
+            batch, rows = [req], req.n
+            deadline = time.monotonic() + self.coalesce_window_s
+            while rows < self.max_coalesce_rows:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    break
+                nxt = self.admission.pop_matching(
+                    req.model, req.sampler, self.max_coalesce_rows - rows,
+                    timeout=left)
+                if nxt is None:
+                    break
+                if self._expired(nxt):
+                    continue
+                batch.append(nxt)
+                rows += nxt.n
+            inflight = self._dispatch(batch)
+            if inflight is None:
+                continue
+            if self.sync_resolve:
+                # PR-4 drain-then-serve semantics (benchmark reference arm):
+                # the scheduler blocks until the batch resolves, so nothing
+                # overlaps device time
+                self._resolve(inflight)
+            else:
+                self._inflight_q.put(inflight)  # bounded: dispatch backpressure
+
+    def _waiter_loop(self) -> None:
+        while True:
+            item = self._inflight_q.get()
+            if item is _SHUTDOWN:
+                return
+            self._resolve(item)
+
+    # -- batch mechanics -----------------------------------------------------
+
+    def _dispatch(self, batch: List[Request]) -> Optional[_Inflight]:
+        """Claim futures, snapshot the model, enqueue one device program.
+        Returns the in-flight record (or None if nothing survived)."""
+        # claim each future first: a client that cancelled while queued is
+        # dropped here — set_result on a cancelled Future raises and would
+        # otherwise kill the scheduler thread, stranding the whole batch
+        batch = [r for r in batch if r.future.set_running_or_notify_cancel()]
+        if not batch:
+            return None
+        total = sum(r.n for r in batch)
+        with self._stats_lock:
+            seed = BATCH_SEED_BASE + self._batch_seed
+            self._batch_seed += 1
+        t0 = time.monotonic()
+        try:
+            handle = self.registry.acquire(batch[0].model)
+            sample = handle.generate_async(total, batch[0].sampler, seed=seed)
+        except BaseException as exc:  # noqa: BLE001 — delivered via futures
+            for r in batch:
+                r.future.set_exception(exc)
+            return None
+        with self._stats_lock:
+            self._inflight += 1
+            self.stats["max_inflight_observed"] = max(
+                self.stats["max_inflight_observed"], self._inflight)
+        return _Inflight(handle, sample, batch, total, t0)
+
+    def _resolve(self, inflight: _Inflight) -> None:
+        """Block on the device values, deliver per-request slices, account
+        queue-wait vs device-time."""
+        batch = inflight.batch
+        try:
+            X, y = inflight.sample.result()
+        except BaseException as exc:  # noqa: BLE001 — delivered via futures
+            for r in batch:
+                r.future.set_exception(exc)
+            with self._stats_lock:
+                self._inflight -= 1
+            return
+        now = time.monotonic()
+        dt = now - inflight.t_dispatch
+        off = 0
+        for r in batch:
+            r.future.set_result((X[off:off + r.n], y[off:off + r.n]))
+            off += r.n
+        with self._stats_lock:
+            self._inflight -= 1
+            waited = sum(inflight.t_dispatch - r.enqueued_s for r in batch)
+            self.stats["requests"] += len(batch)
+            self.stats["rows"] += inflight.total_rows
+            self.stats["gen_s"] += dt
+            self.stats["device_s"] += dt
+            self.stats["queue_wait_s"] += waited
+            self.stats["batches"] += 1
+            self.stats["coalesced_requests"] += len(batch) - 1
+            slot = _sampler_slot(self.stats, batch[0].sampler)
+            slot["requests"] += len(batch)
+            slot["rows"] += inflight.total_rows
+            slot["batches"] += 1
+            slot["device_s"] += dt
+            slot["queue_wait_s"] += waited
+            for r in batch:
+                ten = _tenant_slot(self.stats, r.tenant)
+                ten["requests"] += 1
+                ten["rows"] += r.n
+                ten["queue_wait_s"] += inflight.t_dispatch - r.enqueued_s
+
+    def serve_batch_sync(self, batch: List[Request]) -> None:
+        """Dispatch + resolve one pre-formed batch on the calling thread —
+        the test seam (and the drain arm's inner step)."""
+        inflight = self._dispatch(batch)
+        if inflight is not None:
+            self._resolve(inflight)

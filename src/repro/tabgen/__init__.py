@@ -31,4 +31,4 @@ from repro.tabgen.imputation import impute  # noqa: F401
 from repro.tabgen.samplers import (  # noqa: F401
     default_sampler, get_sampler, list_samplers, register_sampler)
 from repro.tabgen.sampling import (  # noqa: F401
-    sample, sample_labels, sample_loop_reference)
+    SampleHandle, sample, sample_async, sample_labels, sample_loop_reference)

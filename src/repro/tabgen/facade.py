@@ -27,7 +27,19 @@ from repro.core.mixed_types import TabularSchema, _isnan
 from repro.tabgen.artifacts import ForestArtifacts
 from repro.tabgen.fitting import fit_artifacts
 from repro.tabgen.imputation import impute as _impute
-from repro.tabgen.sampling import sample as _sample
+from repro.tabgen.sampling import sample_async as _sample_async
+
+
+class _DecodingHandle:
+    """Schema-aware wrapper over an in-flight sample: decode on resolve."""
+
+    def __init__(self, handle, schema: TabularSchema):
+        self._handle = handle
+        self._schema = schema
+
+    def result(self):
+        X, y = self._handle.result()
+        return self._schema.decode(X), y
 
 
 class TabularGenerator:
@@ -76,13 +88,29 @@ class TabularGenerator:
                  impl: Optional[str] = None):
         """``mesh`` (``"auto"`` | Mesh | None) shards the solve across
         devices; ``impl`` picks the tree-predict backend (xla | pallas |
-        pallas_interpret) — both forwarded to :func:`repro.tabgen.sample`."""
+        pallas_interpret) — both forwarded to :func:`repro.tabgen.sample`.
+
+        Implemented as ``generate_async(...).result()`` so the synchronous
+        path and the serving control plane's in-flight path share one jit
+        cache and one decode path by construction."""
+        return self.generate_async(n, sampler=sampler, seed=seed,
+                                   pad_to=pad_to, mesh=mesh,
+                                   impl=impl).result()
+
+    def generate_async(self, n: int, *, sampler: Optional[str] = None,
+                       seed: int = 0, pad_to: Optional[int] = None,
+                       mesh=None, impl: Optional[str] = None):
+        """Non-blocking generate: dispatches the device program and returns
+        a handle whose ``result()`` finishes the call (block on device,
+        unpad/shuffle, schema decode). The seam the serving scheduler's
+        in-flight batching is built on — dispatch batch ``k+1`` while a
+        waiter thread resolves batch ``k``."""
         assert self.artifacts is not None, "fit() or load() first"
-        X, y = _sample(self.artifacts, n, sampler=sampler, seed=seed,
-                       pad_to=pad_to, mesh=mesh, impl=impl)
-        if self.schema is not None:
-            X = self.schema.decode(X)
-        return X, y
+        handle = _sample_async(self.artifacts, n, sampler=sampler, seed=seed,
+                               pad_to=pad_to, mesh=mesh, impl=impl)
+        if self.schema is None:
+            return handle
+        return _DecodingHandle(handle, self.schema)
 
     def impute(self, X_missing, y=None, *, seed: int = 0,
                refine_rounds: int = 3, impl: Optional[str] = None):

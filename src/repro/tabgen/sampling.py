@@ -136,19 +136,44 @@ def _resolve_sampler(fcfg, sampler: Optional[str]):
     return name, spec
 
 
-def sample(artifacts: ForestArtifacts, n: int, *,
-           sampler: Optional[str] = None, seed: int = 0,
-           pad_to: Optional[int] = None, mesh=None,
-           impl: Optional[str] = None):
-    """Generate ``n`` rows (and their labels) from trained artifacts.
+class SampleHandle:
+    """An in-flight :func:`sample`: device work dispatched, host finish
+    deferred.
 
-    One device dispatch regardless of the number of classes. ``pad_to``
-    fixes the per-class row bucket (>= the largest per-class request) for
-    jit-cache-friendly serving. ``mesh`` (``"auto"`` | Mesh | None) shards
-    the solve — classes on the model axis, rows on the data axes — for a
-    fixed seed the output matches the single-device solve. ``impl`` picks
-    the tree-predict backend; pre-shard the artifacts once with
-    :meth:`ForestArtifacts.shard` to avoid a per-call reshard when serving.
+    Holds the (asynchronously executing) ``[n_y, m, p]`` device array plus
+    the host-side bookkeeping needed to finish the call. ``result()`` blocks
+    until the device values are ready, then unpads and shuffles exactly the
+    way the synchronous path does — so ``sample_async(...).result()`` is
+    bit-identical to ``sample(...)``. A serving waiter thread can resolve
+    handles while the dispatcher admits the next batch (in-flight batching:
+    queue wait no longer stacks on device time)."""
+
+    def __init__(self, x_dev, per_class, classes, rng):
+        self._x_dev = x_dev
+        self._per_class = per_class
+        self._classes = classes
+        self._rng = rng
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray]:
+        x_all = np.asarray(self._x_dev)             # blocks: [n_y, m, p]
+        X = np.concatenate([x_all[yi, :c]
+                            for yi, c in enumerate(self._per_class)])
+        y = np.repeat(self._classes, self._per_class)
+        perm = self._rng.permutation(len(X))
+        return X[perm], y[perm]
+
+
+def sample_async(artifacts: ForestArtifacts, n: int, *,
+                 sampler: Optional[str] = None, seed: int = 0,
+                 pad_to: Optional[int] = None, mesh=None,
+                 impl: Optional[str] = None) -> SampleHandle:
+    """Dispatch a generate call without blocking on the device.
+
+    Everything up to (and including) the jitted solve runs here — jax
+    dispatch is asynchronous, so this returns as soon as the program is
+    enqueued. The returned :class:`SampleHandle` finishes the call;
+    :func:`sample` is literally ``sample_async(...).result()``, so both
+    paths share one jit cache and one output distribution by construction.
     """
     fcfg = artifacts.config
     _, spec = _resolve_sampler(fcfg, sampler)
@@ -172,11 +197,25 @@ def sample(artifacts: ForestArtifacts, n: int, *,
         solver_fn=spec.fn, m=m, depth=fcfg.max_depth, n_t=fcfg.n_t,
         multi_output=fcfg.multi_output, eps=fcfg.eps_diff, impl=impl,
         mesh=mesh)
-    x_all = np.asarray(x_all)                       # [n_y, m, p]
-    X = np.concatenate([x_all[yi, :c] for yi, c in enumerate(per_class)])
-    y = np.repeat(np.asarray(artifacts.classes), per_class)
-    perm = rng.permutation(len(X))
-    return X[perm], y[perm]
+    return SampleHandle(x_all, per_class, np.asarray(artifacts.classes), rng)
+
+
+def sample(artifacts: ForestArtifacts, n: int, *,
+           sampler: Optional[str] = None, seed: int = 0,
+           pad_to: Optional[int] = None, mesh=None,
+           impl: Optional[str] = None):
+    """Generate ``n`` rows (and their labels) from trained artifacts.
+
+    One device dispatch regardless of the number of classes. ``pad_to``
+    fixes the per-class row bucket (>= the largest per-class request) for
+    jit-cache-friendly serving. ``mesh`` (``"auto"`` | Mesh | None) shards
+    the solve — classes on the model axis, rows on the data axes — for a
+    fixed seed the output matches the single-device solve. ``impl`` picks
+    the tree-predict backend; pre-shard the artifacts once with
+    :meth:`ForestArtifacts.shard` to avoid a per-call reshard when serving.
+    """
+    return sample_async(artifacts, n, sampler=sampler, seed=seed,
+                        pad_to=pad_to, mesh=mesh, impl=impl).result()
 
 
 def sample_loop_reference(artifacts: ForestArtifacts, n: int, *,

@@ -1,0 +1,508 @@
+"""Tests for the multi-tenant serving control plane (repro.serving)."""
+import dataclasses
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.config import ForestConfig
+from repro.data.tabular import two_moons
+from repro.serving import (AdmissionController, DeadlineExceeded,
+                           InflightScheduler, ModelRegistry, QueueFull,
+                           RateLimited, TokenBucket, UnknownModel)
+from repro.tabgen import fit_artifacts
+
+
+@pytest.fixture(scope="module")
+def serving_artifacts():
+    X, y = two_moons(400, seed=0)
+    fcfg = ForestConfig(method="flow", n_t=8, duplicate_k=10, n_trees=20,
+                        max_depth=4, n_bins=32, reg_lambda=1.0)
+    return fit_artifacts(X, y, fcfg, seed=0), X
+
+
+# ---------------------------------------------------------------------------
+# fake data plane: deterministic, gateable device work
+# ---------------------------------------------------------------------------
+
+class _FakeSample:
+    def __init__(self, gate, total):
+        self._gate, self._total = gate, total
+
+    def result(self):
+        assert self._gate.wait(30), "test gate never opened"
+        return (np.zeros((self._total, 2), np.float32),
+                np.zeros(self._total, np.int64))
+
+
+class _FakeHandle:
+    samplers = ("euler",)
+    buckets = (64,)
+    version = 1
+
+    def __init__(self, gate):
+        self._gate = gate
+        self.dispatched = 0
+
+    def generate_async(self, n, sampler, *, seed):
+        self.dispatched += 1
+        return _FakeSample(self._gate, n)
+
+
+class _FakeRegistry:
+    buckets = (64,)
+
+    def __init__(self, handle):
+        self._handle = handle
+
+    def peek(self, name):
+        return self._handle
+
+    def acquire(self, name):
+        return self._handle
+
+
+# ---------------------------------------------------------------------------
+# scheduler: in-flight overlap, deadlines, backpressure
+# ---------------------------------------------------------------------------
+
+def test_inflight_overlap_two_batches_in_flight():
+    """While the waiter blocks on batch k, the scheduler dispatches batch
+    k+1 — the property the PR-4 drain loop lacked. Gated fake device work
+    makes the overlap deterministic."""
+    gate = threading.Event()
+    sched = InflightScheduler(_FakeRegistry(_FakeHandle(gate)),
+                              coalesce_window_s=0.0, inflight_depth=2)
+    try:
+        f1 = sched.submit(8)
+        f2 = sched.submit(8)
+        deadline = time.monotonic() + 20
+        while (sched.stats_snapshot()["max_inflight_observed"] < 2
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+        snap = sched.stats_snapshot()
+        assert snap["max_inflight_observed"] >= 2, snap
+    finally:
+        gate.set()
+        sched.stop()
+    for f in (f1, f2):
+        X, y = f.result(timeout=30)
+        assert X.shape == (8, 2) and len(y) == 8
+    assert sched.stats["batches"] == 2  # window 0 -> no coalescing
+
+
+def test_drain_reference_never_overlaps():
+    """sync_resolve=True is the PR-4 semantics kept as the benchmark
+    reference arm: at most one batch in flight, ever."""
+    gate = threading.Event()
+    gate.set()
+    sched = InflightScheduler(_FakeRegistry(_FakeHandle(gate)),
+                              coalesce_window_s=0.0, sync_resolve=True)
+    try:
+        futs = [sched.submit(8) for _ in range(6)]
+        for f in futs:
+            f.result(timeout=30)
+    finally:
+        sched.stop()
+    assert sched.stats["max_inflight_observed"] <= 1
+    assert sched.stats["requests"] == 6
+
+
+def test_deadline_expired_dropped_before_dispatch():
+    """A request whose deadline lapses while queued fails with
+    DeadlineExceeded and never reaches the device. The pipeline is plugged
+    (gate shut, depth 1) so the deadlined request must sit in the queue."""
+    gate = threading.Event()
+    handle = _FakeHandle(gate)
+    sched = InflightScheduler(_FakeRegistry(handle),
+                              coalesce_window_s=0.0, inflight_depth=1)
+    try:
+        plug = [sched.submit(8) for _ in range(4)]  # saturate dispatch+queue
+        doomed = sched.submit(8, deadline_s=0.05)
+        time.sleep(0.4)  # let the deadline lapse while the plug holds
+    finally:
+        gate.set()
+        sched.stop()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=30)
+    for f in plug:
+        X, _ = f.result(timeout=30)
+        assert X.shape == (8, 2)
+    assert sched.stats["dropped_deadline"] == 1
+    assert handle.dispatched == len(plug)  # doomed never dispatched
+
+
+def test_queue_full_rejects_with_retry_after():
+    gate = threading.Event()
+    admission = AdmissionController(queue_limits={"interactive": 2, "bulk": 2})
+    sched = InflightScheduler(_FakeRegistry(_FakeHandle(gate)), admission,
+                              coalesce_window_s=0.0, inflight_depth=1)
+    futs = []
+    try:
+        with pytest.raises(QueueFull) as ei:
+            for _ in range(50):
+                futs.append(sched.submit(8))
+        assert ei.value.retry_after_s > 0
+        assert admission.stats_snapshot()["tenants"]["default"][
+            "rejected_queue"] >= 1
+    finally:
+        gate.set()
+        sched.stop()
+    for f in futs:  # everything admitted before the rejection still serves
+        X, _ = f.result(timeout=30)
+        assert X.shape == (8, 2)
+
+
+def test_rate_limited_rejects_with_retry_after():
+    gate = threading.Event()
+    gate.set()
+    admission = AdmissionController(default_rate=(100.0, 100.0))
+    sched = InflightScheduler(_FakeRegistry(_FakeHandle(gate)), admission,
+                              coalesce_window_s=0.0)
+    try:
+        ok = sched.submit(80)  # inside the 100-row burst
+        with pytest.raises(RateLimited) as ei:
+            sched.submit(80)   # 60 rows short at 100 rows/s
+        assert 0 < ei.value.retry_after_s < 2.0
+        ok.result(timeout=30)
+    finally:
+        sched.stop()
+
+
+def test_token_bucket_refills_on_injected_clock():
+    b = TokenBucket(rate_rows_per_s=10.0, burst_rows=20.0)
+    assert b.take(20, now=0.0) is None          # burst drained
+    retry = b.take(10, now=0.0)
+    assert retry == pytest.approx(1.0)          # 10 rows / 10 rows-per-s
+    assert b.take(10, now=1.0) is None          # refilled exactly enough
+    assert b.take(5, now=1.0) == pytest.approx(0.5)
+
+
+def test_priority_interactive_pops_before_bulk():
+    adm = AdmissionController()
+    mk = lambda prio: type("R", (), {  # noqa: E731 — minimal request stub
+        "n": 8, "sampler": "euler", "model": "default",
+        "tenant": "default", "priority": prio})()
+    adm.offer(mk("bulk"))
+    adm.offer(mk("interactive"))
+    assert adm.pop(timeout=1).priority == "interactive"
+    assert adm.pop(timeout=1).priority == "bulk"
+    with pytest.raises(ValueError):
+        adm.offer(mk("express"))
+
+
+# ---------------------------------------------------------------------------
+# eager validation + stats breakdowns (real model)
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_eagerly(serving_artifacts):
+    from repro.launch.serve_forest import ForestServer
+    art, _ = serving_artifacts
+    server = ForestServer(art, buckets=(64,))
+    with pytest.raises(ValueError, match="no_such"):
+        server.submit(16, sampler="no_such")       # raised HERE, not in a
+    with pytest.raises(ValueError, match="no_such"):
+        server.generate(16, sampler="no_such")     # future after dispatch
+    with pytest.raises(UnknownModel):
+        server.scheduler.submit(16, model="missing")
+    server.stop()
+    assert server.stats["requests"] == 0  # nothing reached the dispatcher
+
+
+def test_stats_split_per_sampler_and_wait_vs_device(serving_artifacts):
+    from repro.launch.serve_forest import ForestServer
+    art, _ = serving_artifacts
+    server = ForestServer(art, samplers=("euler", "heun"), buckets=(64,),
+                          coalesce_window_s=0.05)
+    server.warmup()
+    server.generate(20, sampler="euler", seed=0)
+    futs = [server.submit(10, sampler="heun", tenant="t1"),
+            server.submit(10, sampler="heun", tenant="t2")]
+    for f in futs:
+        f.result(timeout=120)
+    server.stop()
+    s = server.scheduler.stats_snapshot()
+    assert s["per_sampler"]["euler"]["requests"] == 1
+    assert s["per_sampler"]["heun"]["requests"] == 2
+    assert s["per_sampler"]["heun"]["rows"] == 20
+    assert s["per_tenant"]["t1"]["rows"] == 10
+    assert s["per_tenant"]["t2"]["rows"] == 10
+    # the breakdown reconciles: aggregate device time is the sum over
+    # samplers, and queued requests accrued nonnegative wait
+    assert s["device_s"] == pytest.approx(
+        sum(v["device_s"] for v in s["per_sampler"].values()))
+    assert s["queue_wait_s"] >= 0.0
+    assert s["gen_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# registry: LRU placement, promotion round-trip, hot swap
+# ---------------------------------------------------------------------------
+
+def test_registry_lru_eviction_and_promotion_roundtrip(serving_artifacts):
+    art, _ = serving_artifacts
+    from repro.serving.registry import artifacts_nbytes
+    budget = int(artifacts_nbytes(art) * 2.5)  # fits 2 models, not 3
+    reg = ModelRegistry(buckets=(64,), device_budget_bytes=budget)
+    for name in ("a", "b", "c"):
+        reg.register(name, art)
+    assert reg.names() == ["a", "b", "c"]       # all servable...
+    assert reg.hot_names() == ["b", "c"]        # ...two on device ("a" LRU'd)
+    ref_X, ref_y = reg.acquire("a").generate(50, seed=3)  # promotes "a"
+    assert reg.hot_names() == ["a", "c"]        # "b" became the LRU victim
+    reg.acquire("b")                            # promote again -> "c" demoted
+    assert reg.hot_names() == ["a", "b"]
+    d = reg.describe()
+    assert d["a"]["promotions"] == 1 and d["a"]["demotions"] == 1
+    assert d["c"]["demotions"] == 1
+    # a demote/promote round-trip is invisible to callers: bit-identical
+    X2, y2 = reg.acquire("a").generate(50, seed=3)
+    np.testing.assert_array_equal(ref_X, X2)
+    np.testing.assert_array_equal(ref_y, y2)
+    # cold models still serve (host leaves; jit uploads per call)
+    Xc, _ = reg.peek("c").generate(20, seed=1)
+    assert Xc.shape == (20, 2)
+
+
+def test_registry_max_hot_cap(serving_artifacts):
+    art, _ = serving_artifacts
+    reg = ModelRegistry(buckets=(64,), max_hot=1)
+    reg.register("a", art)
+    reg.register("b", art)
+    assert reg.hot_names() == ["b"]
+    reg.acquire("a")
+    assert reg.hot_names() == ["a"]
+    assert reg.stats_snapshot()["hot_bytes"] > 0
+
+
+def test_hot_swap_zero_downtime_under_concurrent_submits(serving_artifacts):
+    """swap() must drop no request: every response is served entirely by
+    the old or entirely by the new version (never mixed), with at least one
+    of each across the swap."""
+    from repro.launch.serve_forest import ForestServer
+    art, _ = serving_artifacts
+    # same shapes, unmistakably different output range (+1000 data shift)
+    art_new = dataclasses.replace(art, mins=np.asarray(art.mins) + 1000.0,
+                                  maxs=np.asarray(art.maxs) + 1000.0)
+    server = ForestServer(art, buckets=(64,), coalesce_window_s=0.01)
+    server.warmup()
+
+    before = server.submit(30)
+    Xb, _ = before.result(timeout=120)           # resolved pre-swap: old
+    stop = threading.Event()
+    futs, futs_lock = [], threading.Lock()
+
+    def hammer():
+        while not stop.is_set():
+            try:
+                f = server.submit(10)
+            except Exception:
+                return
+            with futs_lock:
+                futs.append(f)
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=hammer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    handle = server.registry.swap(server.MODEL, art_new)
+    assert handle.version == 2
+    time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join()
+    after = server.submit(30)
+    Xa, _ = after.result(timeout=120)            # submitted post-swap: new
+    server.stop()
+
+    assert Xb.mean() < 500 < Xa.mean()
+    n_old = n_new = 0
+    for f in futs:                               # zero dropped, zero mixed
+        X, y = f.result(timeout=120)
+        assert X.shape == (10, 2) and len(y) == 10
+        rowmeans = X.mean(axis=1)
+        if (rowmeans < 500).all():
+            n_old += 1
+        else:
+            assert (rowmeans > 500).all(), "response mixed model versions"
+            n_new += 1
+    assert n_old + n_new == len(futs)
+    assert server.registry.describe()["default"]["swaps"] == 1
+
+
+def test_hot_swap_reuses_compiled_programs(serving_artifacts):
+    """Same-shape swap costs one device placement, zero recompiles — the
+    jit cache keys on shapes, not array identity."""
+    import logging
+
+    import jax
+    from repro.launch.serve_forest import ForestServer
+    art, _ = serving_artifacts
+    art_new = dataclasses.replace(art, mins=np.asarray(art.mins) + 1000.0,
+                                  maxs=np.asarray(art.maxs) + 1000.0)
+    server = ForestServer(art, buckets=(64,))
+    server.warmup()
+    records = []
+
+    class Capture(logging.Handler):
+        def emit(self, record):
+            records.append(record.getMessage())
+
+    handler = Capture(level=logging.DEBUG)
+    logger = logging.getLogger("jax")
+    logger.addHandler(handler)
+    try:
+        with jax.log_compiles():
+            server.registry.swap(server.MODEL, art_new)
+            server.submit(23).result(timeout=120)
+            server.stop()
+    finally:
+        logger.removeHandler(handler)
+    compiles = [m for m in records if "ompil" in m or "tracing" in m]
+    assert not compiles, compiles
+
+
+# ---------------------------------------------------------------------------
+# HTTP front end (in-process)
+# ---------------------------------------------------------------------------
+
+def _http(method, url, body=None):
+    req = urllib.request.Request(
+        url, method=method,
+        data=None if body is None else json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            return resp.status, dict(resp.headers), json.load(resp)
+    except urllib.error.HTTPError as err:
+        return err.code, dict(err.headers), json.load(err)
+
+
+@pytest.fixture(scope="module")
+def http_plane(serving_artifacts):
+    from repro.launch.serve_http import ServingApp, serve_in_thread
+    art, _ = serving_artifacts
+    registry = ModelRegistry(buckets=(64,))
+    registry.register("moons", art, samplers=("euler", "heun"))
+    admission = AdmissionController(
+        tenant_rates={"metered": (50.0, 50.0)})
+    app = ServingApp(registry, admission)
+    registry.warmup()
+    httpd, thread = serve_in_thread(app)
+    host, port = httpd.server_address[:2]
+    yield app, f"http://{host}:{port}"
+    httpd.shutdown()
+    httpd.server_close()
+    app.stop()
+    thread.join(timeout=10)
+
+
+def test_http_healthz_models_statz(http_plane):
+    _, base = http_plane
+    status, _, body = _http("GET", f"{base}/healthz")
+    assert status == 200 and body["ok"] and body["models"] == ["moons"]
+    status, _, body = _http("GET", f"{base}/v1/models")
+    assert status == 200
+    assert body["models"]["moons"]["samplers"] == ["euler", "heun"]
+    assert body["models"]["moons"]["hot"] is True
+    status, _, body = _http("GET", f"{base}/statz")
+    assert status == 200
+    assert {"scheduler", "admission", "registry"} <= set(body)
+
+
+def test_http_generate_and_impute(http_plane):
+    _, base = http_plane
+    status, _, body = _http("POST", f"{base}/v1/generate",
+                            {"model": "moons", "n": 40, "sampler": "heun",
+                             "tenant": "t9", "priority": "bulk"})
+    assert status == 200
+    X = np.asarray(body["rows"])
+    assert X.shape == (40, 2) and np.isfinite(X).all()
+    assert len(body["labels"]) == 40 and body["version"] == 1
+    status, _, body = _http(
+        "POST", f"{base}/v1/impute",
+        {"model": "moons", "rows": [[0.5, None], [None, 0.25]]})
+    assert status == 400          # conditional model: labels required
+    assert "labels" in body["error"]
+    status, _, body = _http(
+        "POST", f"{base}/v1/impute",
+        {"model": "moons", "rows": [[0.5, None], [None, 0.25]],
+         "labels": [0, 1]})
+    assert status == 200
+    filled = np.asarray(body["rows"], float)
+    assert filled.shape == (2, 2) and np.isfinite(filled).all()
+    assert filled[0, 0] == pytest.approx(0.5)   # observed cells untouched
+    assert filled[1, 1] == pytest.approx(0.25)
+
+
+def test_http_error_mapping(http_plane):
+    _, base = http_plane
+    status, _, body = _http("POST", f"{base}/v1/generate",
+                            {"model": "nope", "n": 8})
+    assert status == 404 and body["models"] == ["moons"]
+    status, _, body = _http("POST", f"{base}/v1/generate",
+                            {"model": "moons", "n": 8, "sampler": "nope"})
+    assert status == 400 and "sampler" in body["error"]
+    status, _, body = _http("POST", f"{base}/v1/generate",
+                            {"model": "moons", "n": 0})
+    assert status == 400
+    status, _, _ = _http("GET", f"{base}/v1/missing")
+    assert status == 404
+
+
+def test_http_rate_limit_sets_retry_after(http_plane):
+    _, base = http_plane
+    gen = {"model": "moons", "n": 40, "tenant": "metered"}
+    status, _, _ = _http("POST", f"{base}/v1/generate", gen)
+    assert status == 200                        # inside the 50-row burst
+    status, headers, body = _http("POST", f"{base}/v1/generate", gen)
+    assert status == 429
+    assert body["retry_after_s"] > 0
+    assert float(headers["Retry-After"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# live-process smoke (slow lane; also exercised by scripts/ci_smoke.sh)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_http_live_process(tmp_path):
+    import os
+    import signal
+    import subprocess
+    import sys
+    env = dict(os.environ, PYTHONPATH="src", PYTHONUNBUFFERED="1")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve_http", "--demo",
+         "--port", "0", "--buckets", "64"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    base, lines = None, []
+    try:
+        for line in proc.stdout:
+            lines.append(line)
+            if line.startswith("serving on "):
+                base = line.split()[-1].strip()
+                break
+        assert base, "server never came up:\n" + "".join(lines)
+        status, _, body = _http("GET", f"{base}/healthz")
+        assert status == 200 and body["models"] == ["demo"]
+        status, _, body = _http("POST", f"{base}/v1/generate",
+                                {"model": "demo", "n": 32})
+        assert status == 200 and len(body["rows"]) == 32
+    finally:
+        proc.send_signal(signal.SIGINT)
+        try:
+            proc.wait(timeout=60)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            raise
+    assert proc.returncode == 0
+    rest = proc.stdout.read()
+    assert "bye" in rest, rest
