@@ -9,6 +9,11 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 test suite =="
 python -m pytest -x -q
 
+echo "== jaxlint (repo bug-class static analysis) =="
+# fails on any unsuppressed, non-baselined finding; see README "Static
+# analysis" and src/repro/analysis/lint/
+python -m repro.analysis.lint src tests benchmarks scripts
+
 echo "== quickstart example (reduced config) =="
 python examples/quickstart.py --smoke
 

@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""Repo-local jaxlint entry point: ``python scripts/jaxlint.py [paths...]``.
+
+Thin wrapper so the linter runs without an editable install — it prepends
+``src`` to ``sys.path`` relative to the repo root, then delegates to
+``repro.analysis.lint`` (same CLI as ``python -m repro.analysis.lint``).
+"""
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis.lint.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    os.chdir(_REPO)  # default paths + baseline resolve against the repo root
+    sys.exit(main())

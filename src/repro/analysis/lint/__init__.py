@@ -1,0 +1,33 @@
+"""jaxlint: JAX-aware static analysis encoding this repo's bug classes.
+
+Usage::
+
+    python -m repro.analysis.lint [paths...] [--baseline FILE]
+
+Rules (``--list-rules``):
+
+=======  ==================================================================
+JX001    PRNG key consumed by >=2 ``jax.random`` calls without an
+         intervening ``split``/``fold_in`` (PR-2 CFM-jitter bug)
+JX002    module-level ``os.environ`` read frozen into an import-time
+         constant (PR-4 ``REPRO_HIST_IMPL`` bug) — route through
+         :func:`repro.kernels.dispatch.resolve_impl`
+JX003    ``jax.jit`` wrapper built per call / per loop iteration, or
+         unhashable defaults feeding a jit signature (recompile leaks)
+TH001    attribute mutated both inside and outside the owning
+         ``with self._lock`` (PR-4 serving stats race)
+PL001    ``pallas_call`` grid floor-divides an input dim with no padding
+         guard (PR-4 odd-bucket crash)
+=======  ==================================================================
+
+See :mod:`repro.analysis.lint.core` for suppression (``# jaxlint:
+disable=RULE``) and baseline semantics, and
+:mod:`repro.analysis.runtime` for the runtime complement
+(``recompile_budget``).
+"""
+from repro.analysis.lint.core import (Finding, RULES, iter_py_files,  # noqa: F401
+                                      lint_file, lint_source,
+                                      load_baseline, parse_suppressions,
+                                      split_baselined, write_baseline)
+from repro.analysis.lint import rules as _rules  # noqa: F401 — registers rules
+from repro.analysis.lint.cli import main  # noqa: F401

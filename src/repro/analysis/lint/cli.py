@@ -1,0 +1,95 @@
+"""jaxlint command line: ``python -m repro.analysis.lint [paths...]``.
+
+Exit codes: 0 — clean (or every finding suppressed/baselined); 1 — at least
+one new finding; 2 — usage error. CI runs this over
+``src tests benchmarks scripts`` and fails the build on exit 1.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis.lint.core import (Finding, RULES, iter_py_files,
+                                      lint_file, load_baseline,
+                                      split_baselined, write_baseline)
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "scripts")
+DEFAULT_BASELINE = ".jaxlint_baseline.json"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="JAX-aware static analysis encoding this repo's shipped "
+                    "bug classes (PRNG reuse, env snapshots, jit-cache "
+                    "leaks, lock discipline, Pallas grid divisibility).")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file of grandfathered findings "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file: report everything")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record all current findings as the new baseline "
+                         "and exit 0")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="findings only, no summary line")
+    args = ap.parse_args(argv)
+
+    # rule registration happens on import of the rules module
+    from repro.analysis.lint import rules as _rules  # noqa: F401
+
+    if args.list_rules:
+        for rule_id in sorted(RULES):
+            desc, _ = RULES[rule_id]
+            print(f"{rule_id}  {desc}")
+        return 0
+
+    rule_ids = None
+    if args.select:
+        rule_ids = [r.strip() for r in args.select.split(",") if r.strip()]
+        unknown = sorted(set(rule_ids) - set(RULES))
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}; "
+                  f"known: {', '.join(sorted(RULES))}", file=sys.stderr)
+            return 2
+
+    findings: List[Finding] = []
+    n_suppressed = 0
+    n_files = 0
+    for path in iter_py_files(args.paths):
+        n_files += 1
+        fs, sup = lint_file(path, rule_ids)
+        findings.extend(fs)
+        n_suppressed += sup
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    new, grandfathered = split_baselined(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if not args.quiet:
+        extra = []
+        if grandfathered:
+            extra.append(f"{len(grandfathered)} baselined")
+        if n_suppressed:
+            extra.append(f"{n_suppressed} suppressed inline")
+        tail = f" ({', '.join(extra)})" if extra else ""
+        print(f"jaxlint: {len(new)} finding(s) in {n_files} file(s){tail}")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,189 @@
+"""jaxlint core: findings, suppressions, baseline, file walking, rule registry.
+
+The framework is deliberately stdlib-only (``ast`` + ``json``): the CI lane
+that runs it needs no jax install, and importing it can never trigger device
+probing. Rules live in :mod:`repro.analysis.lint.rules`; each encodes one bug
+class this repo has actually shipped and later fixed (see the rule docstrings
+for the PR history).
+
+Three escape hatches, in order of preference:
+
+1. **Fix the code.** The rules flag patterns that were real bugs here.
+2. **Inline suppression** — append ``# jaxlint: disable=RULE`` (or
+   ``disable=RULE1,RULE2`` / ``disable=all``) to the flagged line, or put it
+   on its own comment line directly above. Use when the pattern is deliberate
+   (e.g. a one-shot ``jax.jit(f)(x)`` in a test).
+3. **Baseline** — ``python -m repro.analysis.lint --write-baseline`` records
+   every current finding in ``.jaxlint_baseline.json``; baselined findings
+   are reported as grandfathered and do not fail the build. The baseline is
+   keyed on (path, rule, line), so unrelated edits that shift lines require
+   regenerating it — which is the point: grandfathered debt should be loud,
+   not comfortable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+#: ``# jaxlint: disable=JX001`` / ``disable=JX001,TH001`` / ``disable=all``
+_SUPPRESS_RE = re.compile(r"#\s*jaxlint:\s*disable=([A-Za-z0-9_,\s]+|all)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, pinned to a file and line."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def baseline_key(self) -> Tuple[str, str, int]:
+        return (self.path.replace(os.sep, "/"), self.rule, self.line)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+#: rule id -> (one-line description, check function)
+RULES: Dict[str, Tuple[str, Callable[[ast.Module, str, str], Iterable[Finding]]]] = {}
+
+
+def rule(rule_id: str, description: str):
+    """Register a check: ``fn(tree, source, path) -> iterable[Finding]``."""
+    def deco(fn):
+        RULES[rule_id] = (description, fn)
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def parse_suppressions(source: str) -> Dict[int, Set[str]]:
+    """Line number -> set of suppressed rule ids ({'all'} suppresses any).
+
+    A suppression comment applies to its own line; a *standalone* comment
+    line also applies to the next line, so long expressions can carry the
+    pragma above them instead of trailing past the line-length limit.
+    """
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        spec = m.group(1).strip()
+        rules = ({"all"} if spec == "all"
+                 else {r.strip() for r in spec.split(",") if r.strip()})
+        out.setdefault(i, set()).update(rules)
+        if text.lstrip().startswith("#"):        # standalone pragma line
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+def _suppressed(finding: Finding, suppressions: Dict[int, Set[str]]) -> bool:
+    rules = suppressions.get(finding.line, set())
+    return "all" in rules or finding.rule in rules
+
+
+# ---------------------------------------------------------------------------
+# per-file / per-tree entry points
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<string>",
+                rule_ids: Optional[Iterable[str]] = None
+                ) -> Tuple[List[Finding], int]:
+    """Lint one source string. Returns (active findings, n_suppressed).
+
+    Import of :mod:`repro.analysis.lint.rules` is deferred so the registry
+    is populated exactly once, wherever the caller entered from.
+    """
+    from repro.analysis.lint import rules as _rules  # noqa: F401 — registers
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as err:
+        return [Finding("JX000", path, err.lineno or 1, err.offset or 0,
+                        f"syntax error: {err.msg} (jaxlint cannot analyse "
+                        "this file)")], 0
+    wanted = set(rule_ids) if rule_ids is not None else set(RULES)
+    suppressions = parse_suppressions(source)
+    findings: List[Finding] = []
+    n_suppressed = 0
+    for rule_id in sorted(wanted):
+        _, check = RULES[rule_id]
+        for f in check(tree, source, path):
+            if _suppressed(f, suppressions):
+                n_suppressed += 1
+            else:
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, n_suppressed
+
+
+def lint_file(path: str, rule_ids: Optional[Iterable[str]] = None
+              ) -> Tuple[List[Finding], int]:
+    with open(path, encoding="utf-8") as fh:
+        return lint_source(fh.read(), path, rule_ids)
+
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", ".ruff_cache",
+              "build", "dist", ".eggs"}
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    """Expand files/directories into a sorted, de-duplicated .py file list."""
+    seen: Set[str] = set()
+    for p in paths:
+        if os.path.isfile(p):
+            if p not in seen:
+                seen.add(p)
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in _SKIP_DIRS and not d.endswith(".egg-info"))
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    full = os.path.join(root, name)
+                    if full not in seen:
+                        seen.add(full)
+                        yield full
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> Set[Tuple[str, str, int]]:
+    if not path or not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    return {(e["path"], e["rule"], int(e["line"])) for e in data["findings"]}
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    entries = [{"path": f.path.replace(os.sep, "/"), "rule": f.rule,
+                "line": f.line, "message": f.message}
+               for f in sorted(findings, key=lambda f: f.baseline_key())]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"comment": "grandfathered jaxlint findings; regenerate "
+                              "with: python -m repro.analysis.lint "
+                              "--write-baseline",
+                   "findings": entries}, fh, indent=2)
+        fh.write("\n")
+
+
+def split_baselined(findings: Iterable[Finding],
+                    baseline: Set[Tuple[str, str, int]]
+                    ) -> Tuple[List[Finding], List[Finding]]:
+    """(new, grandfathered) — grandfathered findings don't fail the build."""
+    new, old = [], []
+    for f in findings:
+        (old if f.baseline_key() in baseline else new).append(f)
+    return new, old

@@ -1,0 +1,661 @@
+"""jaxlint rules — this repo's shipped-and-fixed bug classes, as AST checks.
+
+Every rule here is grounded in a concrete regression from this repo's
+history (see ``git log`` / CHANGES.md):
+
+* **JX001** — PR 2: ``itp.sample_bridge`` consumed one PRNG key for both the
+  noise draw and the CFM bridge jitter, making the "independent" jitter
+  exactly ``sigma * x1`` (same key + same shape => same normal draw).
+* **JX002** — PR 4: ``forest/hist.py`` snapshotted ``REPRO_HIST_IMPL`` into
+  a module constant at import time, so setting the env var after the first
+  import was silently ignored and tests could not toggle implementations.
+* **JX003** — recompile leaks: a ``jax.jit`` wrapper built inside a hot
+  path owns a fresh, empty cache every call, and unhashable defaults
+  feeding jit signatures fragment (or break) the cache keying.
+* **TH001** — PR 4: ``ForestServer.stats`` was mutated by the dispatcher
+  thread and read/written unlocked from the submit path.
+* **PL001** — PR 4: the tree-predict ``pallas_call`` asserted
+  ``n % rows_block == 0``, which crashed odd serving buckets and oversize
+  exact-size requests until the wrapper learned to pad.
+
+The rules are lexical-order heuristics, not a dataflow engine: they favour
+catching the historical pattern with near-zero false positives on this tree.
+``# jaxlint: disable=RULE`` handles the deliberate exceptions.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.lint.core import Finding, rule
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a callee: ``jax.random.normal`` ->
+    'jax.random.normal'; anything non-name-like contributes ''."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _last_attr(node: ast.AST) -> str:
+    return _dotted(node).rsplit(".", 1)[-1]
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """Matches ``jax.jit`` / bare ``jit`` references and
+    ``[functools.]partial(jax.jit, ...)`` calls."""
+    name = _dotted(node)
+    if name in ("jax.jit", "jit", "jax.pmap", "pmap"):
+        return True
+    if isinstance(node, ast.Call) and _last_attr(node.func) == "partial":
+        return bool(node.args) and _is_jax_jit(node.args[0])
+    return False
+
+
+def _functions(tree: ast.Module) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# JX001 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+#: calls that *derive* new keys (safe to hand the same key repeatedly)
+_DERIVING = {"split", "fold_in", "PRNGKey", "key", "key_data",
+             "wrap_key_data", "clone"}
+
+#: parameter names treated as PRNG keys even without a visible assignment
+_KEY_PARAM_RE = re.compile(r"^(key|rng|prng_key|root_key|subkey|k\d*)$"
+                           r"|(_key|_keys|_rng)$")
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While)
+_COMPREHENSIONS = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+_TERMINATORS = (ast.Return, ast.Raise, ast.Break, ast.Continue)
+
+
+def _has_prng_evidence(fn: ast.AST) -> bool:
+    """True when the function visibly touches the PRNG: references
+    ``random``/``PRNGKey``/``fold_in``, or calls ``split``/``fold_in`` on a
+    key-named argument. Parameters named ``key``/``k``/... are only treated
+    as PRNG keys in such functions — attention's K tensor and dict-style
+    ``__getitem__(self, key)`` share the names but never the PRNG."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr in (
+                "random", "PRNGKey", "fold_in", "wrap_key_data"):
+            return True
+        if isinstance(node, ast.Name) and node.id in ("PRNGKey", "fold_in"):
+            return True
+        if (isinstance(node, ast.Call)
+                and _last_attr(node.func) in ("split", "fold_in")
+                and node.args and isinstance(node.args[0], ast.Name)
+                and _KEY_PARAM_RE.search(node.args[0].id)):
+            return True
+    return False
+
+
+class _KeyScope:
+    """Per-function lexical walk tracking key variables and their versions.
+
+    A *version* is bumped on every rebinding; each consumption records the
+    (name, version) it saw plus the loop nesting it happened under. Two
+    consumptions of one version => reuse. A consumption strictly deeper in
+    loops than its version's binding => reuse across iterations.
+    """
+
+    def __init__(self, fn, path: str):
+        self.fn = fn
+        self.path = path
+        self.findings: List[Finding] = []
+        self.version: Dict[str, int] = {}
+        self.def_loops: Dict[Tuple[str, int], Tuple[int, ...]] = {}
+        self.consumed: Dict[Tuple[str, int], int] = {}
+        self.loop_stack: Tuple[int, ...] = ()
+        args = fn.args
+        params = [*args.posonlyargs, *args.args, *args.kwonlyargs]
+        if args.vararg:
+            params.append(args.vararg)
+        if args.kwarg:
+            params.append(args.kwarg)
+        if _has_prng_evidence(fn):
+            for p in params:
+                if _KEY_PARAM_RE.search(p.arg):
+                    self._bind(p.arg)
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _bind(self, name: str) -> None:
+        self.version[name] = self.version.get(name, 0) + 1
+        self.def_loops[(name, self.version[name])] = self.loop_stack
+
+    def _is_key(self, name: str) -> bool:
+        return name in self.version
+
+    def _consume(self, name: str, node: ast.AST) -> None:
+        ver = self.version[name]
+        k = (name, ver)
+        self.consumed[k] = self.consumed.get(k, 0) + 1
+        use_loops = self.loop_stack
+        def_loops = self.def_loops.get(k, ())
+        if self.consumed[k] > 1:
+            self.findings.append(Finding(
+                "JX001", self.path, node.lineno, node.col_offset,
+                f"PRNG key '{name}' is consumed by more than one jax.random "
+                "call without an intervening split/fold_in — identical keys "
+                "give identical draws (the PR-2 CFM-jitter bug). Split the "
+                "key, or fold_in a distinct constant per consumer."))
+        elif (len(use_loops) > len(def_loops)
+              and use_loops[:len(def_loops)] == def_loops):
+            self.findings.append(Finding(
+                "JX001", self.path, node.lineno, node.col_offset,
+                f"PRNG key '{name}' was bound outside this loop but is "
+                "consumed inside it — every iteration draws with the same "
+                "key. split() before the loop or fold_in the loop index."))
+
+    # -- assignment targets -------------------------------------------------
+
+    def _targets(self, node: ast.AST) -> Iterator[str]:
+        if isinstance(node, ast.Name):
+            yield node.id
+        elif isinstance(node, (ast.Tuple, ast.List)):
+            for elt in node.elts:
+                yield from self._targets(elt)
+        elif isinstance(node, ast.Starred):
+            yield from self._targets(node.value)
+
+    def _rhs_is_key_source(self, value: ast.AST) -> bool:
+        """RHS that plainly produces PRNG keys (split/fold_in/PRNGKey...).
+
+        A bare ``.split``/``.fold_in`` only counts when the callee is rooted
+        in ``random`` or its first argument is a tracked key — otherwise
+        ``name, n = args.calo.split(":")`` would mint key variables."""
+        if isinstance(value, ast.Call):
+            if _last_attr(value.func) not in _DERIVING:
+                return False
+            dotted = _dotted(value.func)
+            parts = dotted.split(".")
+            if "random" in parts or "PRNGKey" in parts or dotted in (
+                    "PRNGKey", "fold_in", "key", "key_data", "wrap_key_data"):
+                return True
+            return bool(value.args and isinstance(value.args[0], ast.Name)
+                        and self._is_key(value.args[0].id))
+        if isinstance(value, ast.Name):
+            return self._is_key(value.id)
+        if isinstance(value, ast.Subscript):
+            return (isinstance(value.value, ast.Name)
+                    and self._is_key(value.value.id))
+        return False
+
+    # -- walking ------------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._run_body(self.fn.body)
+        return self.findings
+
+    def _run_body(self, body) -> None:
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested scopes get their own _KeyScope
+        if isinstance(stmt, ast.If):
+            self._branches([stmt.body, stmt.orelse], extra_exprs=[stmt.test])
+        elif isinstance(stmt, ast.Try):
+            branches = [stmt.body, *[h.body for h in stmt.handlers],
+                        stmt.orelse]
+            self._branches(branches)
+            self._run_body(stmt.finalbody)
+        elif isinstance(stmt, _LOOPS):
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self._expr(stmt.iter)
+            else:
+                self._expr(stmt.test)
+            outer = self.loop_stack
+            self.loop_stack = outer + (id(stmt),)
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                for name in self._targets(stmt.target):
+                    if self._is_key(name):
+                        self._bind(name)
+            self._run_body(stmt.body)
+            self.loop_stack = outer
+            self._run_body(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._expr(item.context_expr)
+            self._run_body(stmt.body)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._expr(child)
+            self._assignments(stmt)
+
+    def _branches(self, branch_bodies, extra_exprs=()) -> None:
+        """if/try arms: at most one arm executes, so a consumption in each
+        arm is not reuse. Take the max per-(name, version) count across
+        arms; conservatively re-bind anything an arm rebound. An arm that
+        terminates (return/raise/break/continue) never reaches the code
+        after the branch, so its counts do not merge into the fall-through
+        path — reuse *within* the arm was already recorded while walking it."""
+        for e in extra_exprs:
+            self._expr(e)
+        base = dict(self.consumed)
+        merged = dict(self.consumed)
+        bound_after: Set[str] = set()
+        base_version = dict(self.version)
+        base_defs = dict(self.def_loops)
+        for body in branch_bodies:
+            self.consumed = dict(base)
+            self.version = dict(base_version)
+            self.def_loops = dict(base_defs)
+            self._run_body(body)
+            if body and isinstance(body[-1], _TERMINATORS):
+                continue
+            for k, v in self.consumed.items():
+                if v > merged.get(k, 0):
+                    merged[k] = v
+            for name, ver in self.version.items():
+                if ver != base_version.get(name, 0):
+                    bound_after.add(name)
+        self.consumed = merged
+        self.version = dict(base_version)
+        self.def_loops = dict(base_defs)
+        for name in bound_after:
+            self._bind(name)
+
+    def _assignments(self, stmt: ast.stmt) -> None:
+        targets: List[ast.AST] = []
+        value: Optional[ast.AST] = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        elif isinstance(stmt, ast.AugAssign):
+            targets, value = [stmt.target], stmt.value
+        if value is None:
+            return
+        is_key_rhs = self._rhs_is_key_source(value)
+        for t in targets:
+            for name in self._targets(t):
+                if is_key_rhs or self._is_key(name):
+                    self._bind(name)
+
+    def _expr(self, node: ast.AST, comp_depth: int = 0) -> None:
+        """Record consumptions; comprehensions count as loop nesting."""
+        if isinstance(node, ast.Call):
+            deriving = _last_attr(node.func) in _DERIVING
+            for arg in [*node.args, *[kw.value for kw in node.keywords]]:
+                if (not deriving and isinstance(arg, ast.Name)
+                        and self._is_key(arg.id)):
+                    self._consume(arg.id, arg)
+                else:
+                    self._expr(arg, comp_depth)
+            self._expr(node.func, comp_depth)
+            return
+        if isinstance(node, _COMPREHENSIONS):
+            outer = self.loop_stack
+            self.loop_stack = outer + (id(node),)
+            for child in ast.iter_child_nodes(node):
+                self._expr(child, comp_depth + 1)
+            self.loop_stack = outer
+            return
+        if isinstance(node, ast.NamedExpr):
+            self._expr(node.value, comp_depth)
+            if (isinstance(node.target, ast.Name)
+                    and (self._rhs_is_key_source(node.value)
+                         or self._is_key(node.target.id))):
+                self._bind(node.target.id)
+            return
+        if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            return  # separate scope
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.expr, ast.keyword, ast.comprehension)):
+                self._expr(child, comp_depth)
+
+
+@rule("JX001", "PRNG key consumed by >=2 jax.random calls without split/fold_in")
+def check_prng_reuse(tree: ast.Module, source: str, path: str):
+    for fn in _functions(tree):
+        yield from _KeyScope(fn, path).run()
+
+
+# ---------------------------------------------------------------------------
+# JX002 — import-time os.environ snapshot
+# ---------------------------------------------------------------------------
+
+def _module_level_statements(tree: ast.Module) -> Iterator[ast.stmt]:
+    """Top-level statements plus module-level if/try arms and class bodies —
+    everything that executes at import time. Function bodies are excluded."""
+    stack: List[ast.stmt] = list(tree.body)
+    while stack:
+        stmt = stack.pop()
+        yield stmt
+        if isinstance(stmt, ast.If):
+            stack.extend(stmt.body)
+            stack.extend(stmt.orelse)
+        elif isinstance(stmt, ast.Try):
+            stack.extend(stmt.body)
+            stack.extend(stmt.finalbody)
+            stack.extend(stmt.orelse)
+            for h in stmt.handlers:
+                stack.extend(h.body)
+        elif isinstance(stmt, ast.ClassDef):
+            stack.extend(stmt.body)
+        elif isinstance(stmt, (ast.With, ast.For, ast.While)):
+            stack.extend(stmt.body)
+            stack.extend(getattr(stmt, "orelse", []))
+
+
+def _env_reads(node: ast.AST) -> Iterator[ast.AST]:
+    """Yield sub-nodes that read the process environment."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            callee = _dotted(sub.func)
+            if callee in ("os.environ.get", "os.getenv", "environ.get",
+                          "getenv"):
+                yield sub
+        elif isinstance(sub, ast.Subscript):
+            if (_dotted(sub.value) in ("os.environ", "environ")
+                    and isinstance(sub.ctx, ast.Load)):
+                yield sub
+
+
+@rule("JX002", "import-time os.environ read frozen into a module constant")
+def check_env_snapshot(tree: ast.Module, source: str, path: str):
+    for stmt in _module_level_statements(tree):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # writes (os.environ[k] = v, setdefault) configure the process —
+        # only *reads* snapshot state that can then go stale
+        if isinstance(stmt, ast.Assign):
+            sources: List[ast.AST] = [stmt.value]
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            sources = [stmt.value] if stmt.value is not None else []
+        else:
+            sources = [stmt]
+        for src_node in sources:
+            for read in _env_reads(src_node):
+                yield Finding(
+                    "JX002", path, read.lineno, read.col_offset,
+                    "module-level os.environ read freezes the value at "
+                    "import time (the PR-4 REPRO_HIST_IMPL bug) — resolve "
+                    "per call instead, e.g. via "
+                    "repro.kernels.dispatch.resolve_impl for impl switches.")
+
+
+# ---------------------------------------------------------------------------
+# JX003 — jit-cache fragmentation / recompile leaks
+# ---------------------------------------------------------------------------
+
+_ARRAY_CTORS = {"array", "asarray", "zeros", "ones", "full", "arange",
+                "linspace", "eye"}
+
+
+def _bad_default(node: ast.AST) -> Optional[str]:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return "a mutable (unhashable) literal"
+    if isinstance(node, ast.Call) and _last_attr(node.func) in _ARRAY_CTORS:
+        return "a freshly constructed array"
+    return None
+
+
+@rule("JX003", "jit wrapper built per call / unhashable defaults in a jit signature")
+def check_jit_cache(tree: ast.Module, source: str, path: str):
+    # (a) jit-decorated function with unhashable / array defaults
+    for fn in _functions(tree):
+        if not any(_is_jax_jit(d) for d in fn.decorator_list):
+            continue
+        args = fn.args
+        defaults = list(args.defaults) + [d for d in args.kw_defaults
+                                          if d is not None]
+        for d in defaults:
+            why = _bad_default(d)
+            if why:
+                yield Finding(
+                    "JX003", path, d.lineno, d.col_offset,
+                    f"jit-compiled '{fn.name}' has {why} as a default "
+                    "argument — unhashable values fragment (or break) the "
+                    "jit cache key; pass arrays explicitly and keep "
+                    "defaults hashable.")
+    # (b) jax.jit(...) built and immediately used inside a function body —
+    # a fresh wrapper (empty cache) per invocation, and (c) built per loop
+    # iteration anywhere
+    for fn in _functions(tree):
+        for node in ast.walk(fn):
+            target = None
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Call):
+                target = node.func           # jax.jit(f)(x)
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and isinstance(node.func.value, ast.Call)):
+                target = node.func.value     # jax.jit(f).lower(x)
+            if target is not None and _is_jax_jit(target.func):
+                yield Finding(
+                    "JX003", path, target.lineno, target.col_offset,
+                    "jax.jit(...) is created and invoked in one expression "
+                    "inside a function — every call builds a fresh wrapper "
+                    "with an empty cache and recompiles (the serving "
+                    "hot-path leak). Hoist the jitted callable out and "
+                    "reuse it.")
+    for loop in ast.walk(tree):
+        if not isinstance(loop, _LOOPS):
+            continue
+        for node in ast.walk(loop):
+            if (isinstance(node, ast.Call) and _is_jax_jit(node.func)
+                    and not isinstance(node.func, ast.Call)):
+                yield Finding(
+                    "JX003", path, node.lineno, node.col_offset,
+                    "jax.jit(...) wrapper constructed inside a loop — each "
+                    "iteration gets a fresh empty jit cache and recompiles. "
+                    "Build the wrapper once outside the loop.")
+
+
+# ---------------------------------------------------------------------------
+# TH001 — lock discipline
+# ---------------------------------------------------------------------------
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+_MUTATORS = {"add", "append", "extend", "update", "remove", "discard",
+             "clear", "insert", "appendleft", "popleft", "setdefault"}
+
+
+def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+    """self.X assigned a threading.Lock()/RLock()/Condition() anywhere."""
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (isinstance(node.value, ast.Call)
+                and _last_attr(node.value.func) in _LOCK_CTORS):
+            continue
+        for t in node.targets:
+            if (isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"):
+                out.add(t.attr)
+    return out
+
+
+def _self_attr_of_store(target: ast.AST) -> Optional[str]:
+    """'stats' for ``self.stats = ...`` / ``self.stats[...] = ...``."""
+    if isinstance(target, ast.Subscript):
+        target = target.value
+    if (isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name) and target.value.id == "self"):
+        return target.attr
+    return None
+
+
+class _MethodWrites(ast.NodeVisitor):
+    """Collect (attr, locked, node) writes to self.* in one method body."""
+
+    def __init__(self, lock_attrs: Set[str]):
+        self.lock_attrs = lock_attrs
+        self.depth = 0
+        self.writes: List[Tuple[str, bool, ast.AST]] = []
+
+    def _record(self, attr: Optional[str], node: ast.AST) -> None:
+        if attr is not None:
+            self.writes.append((attr, self.depth > 0, node))
+
+    def visit_With(self, node: ast.With) -> None:
+        holds = any(
+            isinstance(item.context_expr, ast.Attribute)
+            and isinstance(item.context_expr.value, ast.Name)
+            and item.context_expr.value.id == "self"
+            and item.context_expr.attr in self.lock_attrs
+            for item in node.items)
+        if holds:
+            self.depth += 1
+        self.generic_visit(node)
+        if holds:
+            self.depth -= 1
+
+    visit_AsyncWith = visit_With
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record(_self_attr_of_store(t), node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record(_self_attr_of_store(node.target), node)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record(_self_attr_of_store(node.target), node)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # self.attr.add(...) — container mutation through a method
+        f = node.func
+        if (isinstance(f, ast.Attribute) and f.attr in _MUTATORS
+                and isinstance(f.value, ast.Attribute)
+                and isinstance(f.value.value, ast.Name)
+                and f.value.value.id == "self"):
+            self._record(f.value.attr, node)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):  # nested defs: out of scope
+        return
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+
+@rule("TH001", "attribute mutated both inside and outside the owning lock")
+def check_lock_discipline(tree: ast.Module, source: str, path: str):
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        locks = _lock_attrs(cls)
+        if not locks:
+            continue
+        per_method: Dict[str, List[Tuple[str, bool, ast.AST]]] = {}
+        for item in cls.body:
+            if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if item.name == "__init__":
+                continue  # construction precedes concurrency
+            visitor = _MethodWrites(locks)
+            for stmt in item.body:
+                visitor.visit(stmt)
+            per_method[item.name] = visitor.writes
+        guarded: Set[str] = set()
+        for writes in per_method.values():
+            guarded |= {attr for attr, locked, _ in writes
+                        if locked and attr not in locks}
+        for name, writes in per_method.items():
+            if name.endswith("_locked"):
+                continue  # convention: caller holds the lock
+            for attr, locked, node in writes:
+                if attr in guarded and not locked:
+                    yield Finding(
+                        "TH001", path, node.lineno, node.col_offset,
+                        f"'{cls.name}.{attr}' is mutated under a lock "
+                        f"elsewhere but written without one in '{name}' — "
+                        "the PR-4 stats race. Hold the lock here, or rename "
+                        "the method '*_locked' if every caller already "
+                        "holds it.")
+
+
+# ---------------------------------------------------------------------------
+# PL001 — Pallas block-shape divisibility
+# ---------------------------------------------------------------------------
+
+def _has_floordiv(node: ast.AST) -> bool:
+    return any(isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.FloorDiv)
+               for sub in ast.walk(node))
+
+
+def _has_divisibility_guard(fn: ast.AST) -> bool:
+    """A padding/divisibility guard the kernel wrappers in this repo use:
+    pl.cdiv + pad, an ``assert ... % ... == 0``, or ceil-div ``-(-n // b)``."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            callee = _last_attr(node.func)
+            # jnp.pad / pl.cdiv and padding helpers (pad_rows, _pad_to_block)
+            if callee == "cdiv" or "pad" in callee:
+                return True
+        if isinstance(node, ast.Assert):
+            if any(isinstance(s, ast.BinOp) and isinstance(s.op, ast.Mod)
+                   for s in ast.walk(node.test)):
+                return True
+        # -(-n // block): ceil-div spelled with unary minus
+        if (isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub)
+                and isinstance(node.operand, ast.BinOp)
+                and isinstance(node.operand.op, ast.FloorDiv)
+                and isinstance(node.operand.left, ast.UnaryOp)
+                and isinstance(node.operand.left.op, ast.USub)):
+            return True
+    # an explicit if-raise on modulo also counts
+    for node in ast.walk(fn):
+        if isinstance(node, ast.If):
+            test_has_mod = any(isinstance(s, ast.BinOp)
+                               and isinstance(s.op, ast.Mod)
+                               for s in ast.walk(node.test))
+            if test_has_mod and any(isinstance(s, ast.Raise)
+                                    for b in node.body for s in ast.walk(b)):
+                return True
+    return False
+
+
+@rule("PL001", "pallas_call grid divides an input dim with no padding guard")
+def check_pallas_grid(tree: ast.Module, source: str, path: str):
+    for fn in _functions(tree):
+        calls = [node for node in ast.walk(fn)
+                 if isinstance(node, ast.Call)
+                 and _last_attr(node.func) == "pallas_call"]
+        if not calls:
+            continue
+        grid_exprs = []
+        for call in calls:
+            for kw in call.keywords:
+                if kw.arg == "grid":
+                    grid_exprs.append((call, kw.value))
+        if not grid_exprs:
+            continue
+        if _has_divisibility_guard(fn):
+            continue
+        fn_has_floordiv = _has_floordiv(fn)
+        for call, grid in grid_exprs:
+            if _has_floordiv(grid) or fn_has_floordiv:
+                yield Finding(
+                    "PL001", path, call.lineno, call.col_offset,
+                    "pallas_call grid is computed with // from an input "
+                    "dimension but the wrapper has no padding guard (pad + "
+                    "pl.cdiv, or an explicit `n % block == 0` check) — odd "
+                    "batch shapes silently drop or misread the tail (the "
+                    "PR-4 odd-bucket crash).")

@@ -1,0 +1,89 @@
+"""Runtime complement to jaxlint: pin jit compile counts over a code region.
+
+jaxlint's JX003 catches recompile leaks *statically* (a ``jax.jit`` wrapper
+built per call owns a fresh, empty cache). This module catches them
+*dynamically*: :func:`capture_compiles` listens to :func:`jax.log_compiles`
+output and :func:`recompile_budget` asserts a compile budget — the serving
+tests use budget 0 to pin "warmup compiled everything; steady state reuses
+cached programs".
+
+Usage (directly, or through the ``recompile_budget`` pytest fixture in
+``tests/conftest.py``)::
+
+    with recompile_budget(0):
+        server.generate(50, seed=11)      # must hit only warm caches
+
+    with recompile_budget(2) as watch:
+        f(x); f(y)                        # at most two fresh programs
+    print(watch.compile_events)
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+from typing import Iterator, List
+
+
+class CompileWatch:
+    """Log lines the ``jax`` logger emitted inside a watched region."""
+
+    def __init__(self) -> None:
+        self.messages: List[str] = []
+
+    @property
+    def compile_events(self) -> List[str]:
+        """Every compilation *or tracing* line — 'Compiling', 'Finished
+        XLA compilation', 'Finished tracing' across jax versions."""
+        return [m for m in self.messages if "ompil" in m or "tracing" in m]
+
+    @property
+    def n_compiles(self) -> int:
+        """Programs actually compiled (one 'Compiling <fn>' line each);
+        excludes re-tracing lines, so it is the budget-friendly count."""
+        return sum(1 for m in self.messages if "ompiling" in m)
+
+
+class _CompileLog(logging.Handler):
+    def __init__(self, sink: List[str]):
+        super().__init__(level=logging.DEBUG)
+        self._sink = sink
+
+    def emit(self, record: logging.LogRecord) -> None:
+        self._sink.append(record.getMessage())
+
+
+@contextlib.contextmanager
+def capture_compiles() -> Iterator[CompileWatch]:
+    """Collect jax compile/tracing log lines for the with-block; no assert."""
+    import jax
+
+    watch = CompileWatch()
+    handler = _CompileLog(watch.messages)
+    logger = logging.getLogger("jax")
+    logger.addHandler(handler)
+    try:
+        with jax.log_compiles():
+            yield watch
+    finally:
+        logger.removeHandler(handler)
+
+
+@contextlib.contextmanager
+def recompile_budget(budget: int = 0) -> Iterator[CompileWatch]:
+    """Assert at most ``budget`` compiles happen inside the with-block.
+
+    ``budget=0`` is strict: *any* compile or tracing activity fails — the
+    zero-recompile pin the serving tests rely on. A positive budget counts
+    compiled programs only (re-traces that hit the cache are free).
+    Exceptions raised by the block propagate unchanged (no masking).
+    """
+    with capture_compiles() as watch:
+        yield watch
+    if budget == 0:
+        assert not watch.compile_events, (
+            "expected zero jit compiles/traces in this region, got "
+            f"{len(watch.compile_events)}: {watch.compile_events}")
+    else:
+        assert watch.n_compiles <= budget, (
+            f"compile budget {budget} exceeded: {watch.n_compiles} programs "
+            f"compiled: {[m for m in watch.messages if 'ompiling' in m]}")

@@ -19,24 +19,27 @@ does).
 from __future__ import annotations
 
 import os
-from typing import Optional
+from typing import Optional, Sequence
 
 VALID_IMPLS = ("xla", "pallas", "pallas_interpret")
 
 
 def resolve_impl(*candidates: Optional[str], env_var: str,
-                 default: str = "xla") -> str:
+                 default: str = "xla",
+                 valid: Sequence[str] = VALID_IMPLS) -> str:
     """First non-empty candidate, else ``os.environ[env_var]``, else default.
 
     Candidates are explicit call arguments and config fields, most specific
     first; ``None`` (and ``""``) mean "not specified". The winning value is
-    validated against :data:`VALID_IMPLS` so a typo'd env var fails loudly at
-    the call that would have silently used the wrong path.
+    validated against ``valid`` (default :data:`VALID_IMPLS`; switches with
+    their own vocabulary, e.g. attention's ``blocked``/``packed``, pass
+    theirs) so a typo'd env var fails loudly at the call that would have
+    silently used the wrong path.
     """
     impl = next((c for c in candidates if c), None) \
         or os.environ.get(env_var) or default
-    if impl not in VALID_IMPLS:
+    if impl not in valid:
         raise ValueError(
             f"unknown kernel impl {impl!r} (via {env_var} or caller); "
-            f"expected one of {VALID_IMPLS}")
+            f"expected one of {tuple(valid)}")
     return impl

@@ -12,12 +12,12 @@ dry-run lowers.
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_impl
 from repro.models.layers import _normal, apply_rope
 
 NEG_INF = -1e30
@@ -25,7 +25,14 @@ NEG_INF = -1e30
 # 'blocked' (default): full-grid blocked attention (computes masked blocks).
 # 'packed': causal triangle packing — only the n_q(n_q+1)/2 visible block
 # pairs are computed, realising the S^2/2 causal FLOP saving (§Perf).
-_ATTN_IMPL = os.environ.get("REPRO_ATTN_IMPL", "blocked")
+ATTN_IMPLS = ("blocked", "packed")
+
+
+def _attn_impl(impl: Optional[str] = None) -> str:
+    """Resolve the attention impl per call (arg > REPRO_ATTN_IMPL > default);
+    a module-level snapshot would freeze the env var at import time."""
+    return resolve_impl(impl, env_var="REPRO_ATTN_IMPL", default="blocked",
+                        valid=ATTN_IMPLS)
 
 
 # ---------------------------------------------------------------------------
@@ -110,16 +117,18 @@ def mea_attention_packed(q, k, v, *, block: int = 1024):
 
 
 def mea_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                  q_block: int = 512, kv_block: int = 1024, q_offset: int = 0):
+                  q_block: int = 512, kv_block: int = 1024, q_offset: int = 0,
+                  impl: Optional[str] = None):
     """Memory-efficient attention with GQA head grouping.
 
     q: [B, Hq, Sq, d]; k, v: [B, Hkv, Skv, d].
     Online softmax over kv blocks inside a scan over q blocks; fp32 running
     statistics. ``window > 0`` adds a sliding-window band to the causal mask.
+    ``impl`` picks 'blocked'/'packed' per call (else REPRO_ATTN_IMPL).
     """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
-    if (_ATTN_IMPL == "packed" and causal and window <= 0 and sq == skv
+    if (_attn_impl(impl) == "packed" and causal and window <= 0 and sq == skv
             and q_offset == 0 and sq > kv_block):
         return mea_attention_packed(q, k, v, block=kv_block)
     if sq <= q_block and skv <= kv_block:

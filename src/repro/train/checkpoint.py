@@ -179,8 +179,11 @@ class GridManifest:
                     "resuming would mix stale batch_*.npz files with new "
                     "ones. Pass resume=False (or a fresh checkpoint_dir) "
                     "to retrain.")
-            self._done = set(tuple(e) for e in manifest["batches"])
-        return set(self._done)
+            done = set(tuple(e) for e in manifest["batches"])
+            with self._lock:
+                self._done = done
+        with self._lock:
+            return set(self._done)
 
     def mark_done(self, key: Tuple[int, int]) -> None:
         """Durably record ``key = (b0, n_ensembles)`` as committed."""

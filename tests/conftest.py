@@ -1,0 +1,11 @@
+"""Shared fixtures for the test suite."""
+import pytest
+
+
+@pytest.fixture
+def recompile_budget():
+    """Context-manager factory pinning jit compile counts over a region:
+    ``with recompile_budget(0): server.generate(...)`` fails on any compile
+    or tracing activity. See :mod:`repro.analysis.runtime`."""
+    from repro.analysis.runtime import recompile_budget as _recompile_budget
+    return _recompile_budget

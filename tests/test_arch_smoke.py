@@ -47,7 +47,7 @@ def test_forward_and_train_step(arch_id):
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     batch = _batch(cfg)
 
-    loss, metrics = jax.jit(
+    loss, metrics = jax.jit(  # jaxlint: disable=JX003 — one-shot smoke compile
         lambda p, b: lm.loss_fn(p, b, cfg, dtype=jnp.float32,
                                 remat_policy="none"))(params, batch)
     assert loss.shape == ()
@@ -80,7 +80,7 @@ def test_decode_step_shapes(arch_id):
     b, size = 2, 16
     cache = lm.init_cache(cfg, b, size, jnp.float32, enc_len=8)
     tok = jnp.zeros((b, 1), jnp.int32)
-    logits, cache2 = jax.jit(
+    logits, cache2 = jax.jit(  # jaxlint: disable=JX003 — one-shot smoke compile
         lambda p, c, t: lm.decode_step(p, c, t, jnp.int32(3), cfg,
                                        dtype=jnp.float32))(params, cache, tok)
     assert logits.shape == (b, 1, cfg.vocab)

@@ -40,7 +40,7 @@ def test_fwd_flops_match_hlo_dense():
                 else x @ p["lm_head"]["w"])
 
     toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
-    compiled = jax.jit(fwd).lower(params, toks).compile()
+    compiled = jax.jit(fwd).lower(params, toks).compile()  # jaxlint: disable=JX003 — compiled once, for cost analysis
     # fl.hlo_cost_analysis handles both the dict and list-of-dicts return
     # shapes of compiled.cost_analysis() across jax versions
     hlo_flops = fl.hlo_cost_analysis(compiled)["flops"]

@@ -1,0 +1,132 @@
+"""resolve_impl precedence + the attention per-call env switch (the JX002
+bug class: an import-time snapshot would make everything here impossible)."""
+import numpy as np
+import pytest
+
+from repro.kernels.dispatch import VALID_IMPLS, resolve_impl
+
+
+# ---------------------------------------------------------------------------
+# precedence: per-call arg > config field > env var > default
+# ---------------------------------------------------------------------------
+
+def test_default_wins_when_nothing_set(monkeypatch):
+    monkeypatch.delenv("REPRO_TEST_IMPL", raising=False)
+    assert resolve_impl(None, None, env_var="REPRO_TEST_IMPL") == "xla"
+    assert resolve_impl(env_var="REPRO_TEST_IMPL",
+                        default="pallas") == "pallas"
+
+
+def test_env_beats_default(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_IMPL", "pallas_interpret")
+    assert resolve_impl(None, env_var="REPRO_TEST_IMPL") == "pallas_interpret"
+
+
+def test_config_beats_env(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_IMPL", "pallas_interpret")
+    assert resolve_impl(None, "pallas", env_var="REPRO_TEST_IMPL") == "pallas"
+
+
+def test_call_arg_beats_config_and_env(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_IMPL", "pallas_interpret")
+    assert resolve_impl("xla", "pallas", env_var="REPRO_TEST_IMPL") == "xla"
+
+
+def test_empty_string_means_unspecified(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_IMPL", "pallas")
+    assert resolve_impl("", None, env_var="REPRO_TEST_IMPL") == "pallas"
+    monkeypatch.setenv("REPRO_TEST_IMPL", "")
+    assert resolve_impl("", None, env_var="REPRO_TEST_IMPL") == "xla"
+
+
+def test_resolution_happens_at_call_time(monkeypatch):
+    """The PR-4 bug: a module constant froze the env var at import time.
+    resolve_impl must see mutations made long after any import."""
+    monkeypatch.delenv("REPRO_TEST_IMPL", raising=False)
+    assert resolve_impl(env_var="REPRO_TEST_IMPL") == "xla"
+    monkeypatch.setenv("REPRO_TEST_IMPL", "pallas")
+    assert resolve_impl(env_var="REPRO_TEST_IMPL") == "pallas"
+    monkeypatch.setenv("REPRO_TEST_IMPL", "xla")
+    assert resolve_impl(env_var="REPRO_TEST_IMPL") == "xla"
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_typo_fails_loudly(monkeypatch):
+    monkeypatch.setenv("REPRO_TEST_IMPL", "palas")  # typo'd env var
+    with pytest.raises(ValueError, match="palas"):
+        resolve_impl(env_var="REPRO_TEST_IMPL")
+    with pytest.raises(ValueError, match="REPRO_TEST_IMPL"):
+        resolve_impl("nope", env_var="REPRO_TEST_IMPL")
+
+
+def test_custom_vocabulary(monkeypatch):
+    monkeypatch.delenv("REPRO_TEST_IMPL", raising=False)
+    assert resolve_impl("packed", env_var="REPRO_TEST_IMPL",
+                        default="blocked",
+                        valid=("blocked", "packed")) == "packed"
+    # the default vocabulary is rejected under a custom one
+    with pytest.raises(ValueError, match="blocked"):
+        resolve_impl("xla", env_var="REPRO_TEST_IMPL", default="blocked",
+                     valid=("blocked", "packed"))
+    assert "xla" in VALID_IMPLS  # custom vocab did not mutate the default
+
+
+# ---------------------------------------------------------------------------
+# attention: REPRO_ATTN_IMPL is consulted per call, not at import
+# ---------------------------------------------------------------------------
+
+def _qkv(sq=8, d=4):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    mk = lambda: jnp.asarray(rng.normal(size=(1, 2, sq, d)), jnp.float32)
+    return mk(), mk(), mk()
+
+
+def test_attention_env_switch_is_per_call(monkeypatch):
+    from repro.models import attention
+
+    calls = []
+    real_packed = attention.mea_attention_packed
+
+    def spy(q, k, v, block):
+        calls.append(block)
+        return real_packed(q, k, v, block=block)
+
+    monkeypatch.setattr(attention, "mea_attention_packed", spy)
+    q, k, v = _qkv()
+    # sq=8 > kv_block=4 and causal/no-window/self-attention: packed-eligible
+    monkeypatch.delenv("REPRO_ATTN_IMPL", raising=False)
+    out_blocked = attention.mea_attention(q, k, v, causal=True,
+                                          q_block=4, kv_block=4)
+    assert not calls, "default 'blocked' must not take the packed path"
+    # flipping the env var AFTER import reroutes the very next call
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "packed")
+    out_packed = attention.mea_attention(q, k, v, causal=True,
+                                         q_block=4, kv_block=4)
+    assert calls == [4]
+    np.testing.assert_allclose(np.asarray(out_blocked),
+                               np.asarray(out_packed), atol=1e-5)
+
+
+def test_attention_impl_arg_beats_env(monkeypatch):
+    from repro.models import attention
+
+    calls = []
+    monkeypatch.setattr(attention, "mea_attention_packed",
+                        lambda q, k, v, block: calls.append(block))
+    q, k, v = _qkv()
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "packed")
+    attention.mea_attention(q, k, v, causal=True, q_block=4, kv_block=4,
+                            impl="blocked")
+    assert not calls, "impl='blocked' argument must override the env var"
+
+
+def test_attention_rejects_unknown_impl(monkeypatch):
+    from repro.models import attention
+    q, k, v = _qkv()
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "fused")  # not a real impl
+    with pytest.raises(ValueError, match="fused"):
+        attention.mea_attention(q, k, v, causal=True, q_block=4, kv_block=4)

@@ -336,36 +336,20 @@ def test_hot_swap_zero_downtime_under_concurrent_submits(serving_artifacts):
     assert server.registry.describe()["default"]["swaps"] == 1
 
 
-def test_hot_swap_reuses_compiled_programs(serving_artifacts):
+def test_hot_swap_reuses_compiled_programs(serving_artifacts,
+                                           recompile_budget):
     """Same-shape swap costs one device placement, zero recompiles — the
     jit cache keys on shapes, not array identity."""
-    import logging
-
-    import jax
     from repro.launch.serve_forest import ForestServer
     art, _ = serving_artifacts
     art_new = dataclasses.replace(art, mins=np.asarray(art.mins) + 1000.0,
                                   maxs=np.asarray(art.maxs) + 1000.0)
     server = ForestServer(art, buckets=(64,))
     server.warmup()
-    records = []
-
-    class Capture(logging.Handler):
-        def emit(self, record):
-            records.append(record.getMessage())
-
-    handler = Capture(level=logging.DEBUG)
-    logger = logging.getLogger("jax")
-    logger.addHandler(handler)
-    try:
-        with jax.log_compiles():
-            server.registry.swap(server.MODEL, art_new)
-            server.submit(23).result(timeout=120)
-            server.stop()
-    finally:
-        logger.removeHandler(handler)
-    compiles = [m for m in records if "ompil" in m or "tracing" in m]
-    assert not compiles, compiles
+    with recompile_budget(0):
+        server.registry.swap(server.MODEL, art_new)
+        server.submit(23).result(timeout=120)
+        server.stop()
 
 
 # ---------------------------------------------------------------------------

@@ -101,7 +101,7 @@ def test_artifacts_is_pytree(moons_flow_artifacts):
     np.testing.assert_array_equal(np.asarray(art.feat), np.asarray(art2.feat))
     np.testing.assert_array_equal(art2.classes, art.classes)
     # a whole artifacts object crosses a jit boundary (classes/counts static)
-    out = jax.jit(lambda a: a.mins + 1.0)(art)
+    out = jax.jit(lambda a: a.mins + 1.0)(art)  # jaxlint: disable=JX003 — one-shot pytree-boundary check
     np.testing.assert_allclose(np.asarray(out), np.asarray(art.mins) + 1.0)
 
 
@@ -233,37 +233,21 @@ def test_forest_server_cancelled_future_does_not_kill_batch(
     assert server.max_coalesce_rows == max(server.buckets)
 
 
-def test_forest_server_zero_compiles_after_warmup(moons_flow_artifacts):
+def test_forest_server_zero_compiles_after_warmup(moons_flow_artifacts,
+                                                  recompile_budget):
     """After warmup, served requests (sync and micro-batched) reuse cached
     programs — warmup goes through the same facade path as generate(), so
-    the caches can't diverge. Pinned via jax.log_compiles."""
-    import jax
-    import logging
+    the caches can't diverge. Pinned via the recompile_budget fixture."""
     from repro.launch.serve_forest import ForestServer
     art, _ = moons_flow_artifacts
     server = ForestServer(art, buckets=(64, 256))
     server.warmup()
 
-    records = []
-
-    class Capture(logging.Handler):
-        def emit(self, record):
-            records.append(record.getMessage())
-
-    handler = Capture(level=logging.DEBUG)
-    logger = logging.getLogger("jax")
-    logger.addHandler(handler)
-    try:
-        with jax.log_compiles():
-            server.generate(50, seed=11)
-            fut = server.submit(23)
-            fut.result(timeout=120)
-            server.stop()
-    finally:
-        logger.removeHandler(handler)
-    compiles = [m for m in records
-                if "ompil" in m or "tracing" in m]  # Compiling/compilation
-    assert not compiles, compiles
+    with recompile_budget(0):
+        server.generate(50, seed=11)
+        fut = server.submit(23)
+        fut.result(timeout=120)
+        server.stop()
 
 
 def test_deprecation_shim_still_works():
