@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Docs checker: relative links resolve, fenced python blocks are valid.
+
+Stdlib-only (runs in the bare-checkout CI docs lane):
+
+  python scripts/check_docs.py                # README.md + docs/*.md
+  python scripts/check_docs.py --exec         # also exec each python block
+  python scripts/check_docs.py docs/observability.md
+
+Checks per markdown file:
+
+* every relative link / image target ``[text](path)`` exists on disk
+  (anchors and ``http(s)://`` / ``mailto:`` targets are skipped; an
+  in-page ``#fragment`` on an existing file is fine — fragments are not
+  resolved);
+* every fenced ```` ```python ```` block at least ``compile()``s —
+  stale identifiers still slip through compile, so ``--exec`` runs each
+  block in a fresh namespace (with ``src`` on ``sys.path``) and fails on
+  any exception.  Blocks that are deliberately illustrative fragments
+  can opt out of execution (they are still compiled) with
+  ```` ```python notest ```` on the fence line.
+
+Exit 1 on any finding, 0 when clean.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE_RE = re.compile(r"^```(\S*)\s*(.*)$")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _strip_code(text: str) -> str:
+    """Markdown with fenced blocks blanked, so code is not link-checked."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line):
+            in_fence = not in_fence
+            out.append("")
+        else:
+            out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+def check_links(path: str, text: str) -> list:
+    problems = []
+    base = os.path.dirname(os.path.abspath(path))
+    for m in _LINK_RE.finditer(_strip_code(text)):
+        target = m.group(1)
+        if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            line = text[:m.start()].count("\n") + 1
+            problems.append(f"{path}:{line}: broken link -> {target}")
+    return problems
+
+
+def python_blocks(text: str):
+    """(start_line, source, notest) for each fenced python block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE_RE.match(lines[i])
+        if m and m.group(1) in ("python", "py"):
+            notest = "notest" in m.group(2)
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start + 1, "\n".join(body), notest
+        i += 1
+
+
+def check_python(path: str, text: str, do_exec: bool) -> list:
+    problems = []
+    for line, src, notest in python_blocks(text):
+        label = f"{path}:{line}"
+        try:
+            code = compile(src, label, "exec")
+        except SyntaxError as err:
+            problems.append(f"{label}: python block does not compile: {err}")
+            continue
+        if do_exec and not notest:
+            try:
+                exec(code, {"__name__": f"docs_block_{line}"})
+            except Exception as err:  # noqa: BLE001 — report, don't crash
+                problems.append(f"{label}: python block raised "
+                                f"{type(err).__name__}: {err}")
+    return problems
+
+
+def default_files(root: str) -> list:
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="markdown files (default: README.md + docs/*.md)")
+    ap.add_argument("--exec", dest="do_exec", action="store_true",
+                    help="execute python blocks instead of just compiling")
+    ap.add_argument("--syntax-only", action="store_true",
+                    help="alias for the default compile-only mode")
+    args = ap.parse_args(argv)
+    do_exec = args.do_exec and not args.syntax_only
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = args.files or default_files(root)
+    if do_exec:
+        sys.path.insert(0, os.path.join(root, "src"))
+
+    problems, n_blocks = [], 0
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        problems += check_links(path, text)
+        blocks = list(python_blocks(text))
+        n_blocks += len(blocks)
+        problems += check_python(path, text, do_exec)
+
+    for p in problems:
+        print(p)
+    mode = "exec" if do_exec else "compile"
+    print(f"check_docs: {len(files)} file(s), {n_blocks} python block(s) "
+          f"({mode}), {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,12 @@ echo "== jaxlint (repo bug-class static analysis) =="
 # analysis" and src/repro/analysis/lint/
 python -m repro.analysis.lint src tests benchmarks scripts
 
+echo "== docs check (links + fenced python blocks) =="
+# broken relative links and non-compiling python blocks in README/docs
+# fail the build; --exec is a dev-side deep check (README blocks are
+# illustrative fragments)
+python scripts/check_docs.py
+
 echo "== quickstart example (reduced config) =="
 python examples/quickstart.py --smoke
 
@@ -60,6 +66,17 @@ req = urllib.request.Request(
 with urllib.request.urlopen(req, timeout=120) as r:
     body = json.load(r)
 assert len(body["rows"]) == 48 and len(body["labels"]) == 48, body.keys()
+# /metrics is Prometheus text and must reconcile exactly with /statz
+with urllib.request.urlopen(base + "/metrics", timeout=60) as r:
+    ctype, prom = r.headers["Content-Type"], r.read().decode()
+assert ctype.startswith("text/plain; version=0.0.4"), ctype
+rows_total = sum(
+    float(line.rsplit(" ", 1)[1]) for line in prom.splitlines()
+    if line.startswith("serving_rows_total"))
+with urllib.request.urlopen(base + "/statz", timeout=60) as r:
+    statz = json.load(r)
+assert rows_total == statz["scheduler"]["rows"] == 48, (
+    rows_total, statz["scheduler"]["rows"])
 proc.send_signal(signal.SIGINT)
 proc.wait(timeout=60)
 rest = proc.stdout.read()

@@ -13,7 +13,11 @@ history (see ``git log`` / CHANGES.md):
   path owns a fresh, empty cache every call, and unhashable defaults
   feeding jit signatures fragment (or break) the cache keying.
 * **TH001** — PR 4: ``ForestServer.stats`` was mutated by the dispatcher
-  thread and read/written unlocked from the submit path.
+  thread and read/written unlocked from the submit path. Extended in PR 8
+  after the ``AdmissionController`` per-tenant ``setdefault`` slipped past
+  it: a locked *read* now also marks an attribute as lock-guarded, so a
+  class whose only locked accesses are snapshot reads still gets its
+  unlocked mutations flagged.
 * **PL001** — PR 4: the tree-predict ``pallas_call`` asserted
   ``n % rows_block == 0``, which crashed odd serving buckets and oversize
   exact-size requests until the wrapper learned to pad.
@@ -383,6 +387,21 @@ def check_env_snapshot(tree: ast.Module, source: str, path: str):
             sources: List[ast.AST] = [stmt.value]
         elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
             sources = [stmt.value] if stmt.value is not None else []
+        elif isinstance(stmt, (ast.If, ast.While)):
+            # compound statements: _module_level_statements already yields
+            # their bodies; only the header expression runs at import here.
+            # Walking the whole node would descend into method bodies (a
+            # per-call env read inside a class method is *not* a snapshot).
+            sources = [stmt.test]
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            sources = [stmt.iter]
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            sources = [item.context_expr for item in stmt.items]
+        elif isinstance(stmt, ast.ClassDef):
+            sources = [*stmt.bases, *[k.value for k in stmt.keywords],
+                       *stmt.decorator_list]
+        elif isinstance(stmt, ast.Try):
+            sources = []
         else:
             sources = [stmt]
         for src_node in sources:
@@ -498,12 +517,17 @@ def _self_attr_of_store(target: ast.AST) -> Optional[str]:
 
 
 class _MethodWrites(ast.NodeVisitor):
-    """Collect (attr, locked, node) writes to self.* in one method body."""
+    """Collect (attr, locked, node) writes to self.* in one method body,
+    plus the set of attrs *read* while a lock is held — a locked read is
+    as much a claim that the lock guards the attribute as a locked write
+    (the PR-8 admission pattern: mutate via an unlocked ``setdefault``
+    helper, read the same dict under the lock in the snapshot path)."""
 
     def __init__(self, lock_attrs: Set[str]):
         self.lock_attrs = lock_attrs
         self.depth = 0
         self.writes: List[Tuple[str, bool, ast.AST]] = []
+        self.locked_reads: Set[str] = set()
 
     def _record(self, attr: Optional[str], node: ast.AST) -> None:
         if attr is not None:
@@ -548,6 +572,16 @@ class _MethodWrites(ast.NodeVisitor):
             self._record(f.value.attr, node)
         self.generic_visit(node)
 
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        # a Load of self.attr while the lock is held claims the lock
+        # guards it — e.g. a stats snapshot built under the lock
+        if (self.depth > 0 and isinstance(node.ctx, ast.Load)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr not in self.lock_attrs):
+            self.locked_reads.add(node.attr)
+        self.generic_visit(node)
+
     def visit_FunctionDef(self, node):  # nested defs: out of scope
         return
 
@@ -564,6 +598,7 @@ def check_lock_discipline(tree: ast.Module, source: str, path: str):
         if not locks:
             continue
         per_method: Dict[str, List[Tuple[str, bool, ast.AST]]] = {}
+        guarded: Set[str] = set()
         for item in cls.body:
             if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue
@@ -573,7 +608,9 @@ def check_lock_discipline(tree: ast.Module, source: str, path: str):
             for stmt in item.body:
                 visitor.visit(stmt)
             per_method[item.name] = visitor.writes
-        guarded: Set[str] = set()
+            # locked reads count as guard evidence too (the PR-8 admission
+            # setdefault bug: the only locked access was the snapshot read)
+            guarded |= visitor.locked_reads
         for writes in per_method.values():
             guarded |= {attr for attr, locked, _ in writes
                         if locked and attr not in locks}
@@ -584,8 +621,8 @@ def check_lock_discipline(tree: ast.Module, source: str, path: str):
                 if attr in guarded and not locked:
                     yield Finding(
                         "TH001", path, node.lineno, node.col_offset,
-                        f"'{cls.name}.{attr}' is mutated under a lock "
-                        f"elsewhere but written without one in '{name}' — "
+                        f"'{cls.name}.{attr}' is accessed under a lock "
+                        f"elsewhere but mutated without one in '{name}' — "
                         "the PR-4 stats race. Hold the lock here, or rename "
                         "the method '*_locked' if every caller already "
                         "holds it.")

@@ -40,6 +40,7 @@ from typing import Iterable, Optional, Tuple
 import numpy as np
 
 from repro.data.sketch import QuantileSketch
+from repro.obs import default_registry, default_tracer
 from repro.train.checkpoint import _fsync_replace
 
 FORMAT_VERSION = 1
@@ -315,7 +316,8 @@ def _stats_name(n_shards: int) -> str:
 
 def ingest(batches, directory: str, *, shard_rows: int = 65536,
            resume: bool = False, source=None,
-           sketch_entries: int = 2048) -> DatasetStore:
+           sketch_entries: int = 2048,
+           metrics=None, tracer=None) -> DatasetStore:
     """Write a :class:`DatasetStore` from a row-batch iterator in one pass.
 
     ``batches`` yields ``X [k, p]`` arrays or ``(X, y)`` tuples (any ``k``;
@@ -334,7 +336,26 @@ def ingest(batches, directory: str, *, shard_rows: int = 65536,
     ``source`` is an arbitrary JSON-serialisable description fingerprinted
     into the manifest (e.g. the CLI's generator spec) so a resume can only
     ever continue the stream it started with.
+
+    Each shard commit runs under an ``ingest.shard`` span and advances
+    ``ingest_rows`` / ``ingest_shards`` / ``ingest_batches`` counters plus
+    an ``ingest_shard_commit_seconds`` histogram on ``metrics`` /
+    ``tracer`` (default: the process-wide :func:`repro.obs.default_registry`
+    / :func:`repro.obs.default_tracer`, which ``repro.launch.ingest
+    --metrics-dump`` renders at exit).
     """
+    _m = metrics or default_registry()
+    _t = tracer or default_tracer()
+    c_rows = _m.counter("ingest_rows", "Rows committed to dataset stores")
+    c_shards = _m.counter("ingest_shards",
+                          "Shards durably committed (manifest advanced)")
+    c_batches = _m.counter("ingest_batches",
+                           "Source batches consumed (after resume skip)")
+    h_commit = _m.histogram(
+        "ingest_shard_commit_seconds",
+        "Per-shard commit time: shard files + stats + manifest "
+        "(ingest.shard span durations)")
+
     os.makedirs(directory, exist_ok=True)
     existing = _read_manifest(directory)
     if existing is not None and not resume:
@@ -385,6 +406,15 @@ def ingest(batches, directory: str, *, shard_rows: int = 65536,
 
     def _commit(xs: np.ndarray, ys: Optional[np.ndarray], complete: bool):
         """One atomic step: shard files -> stats -> manifest."""
+        with _t.span("ingest.shard", shard=len(shards), rows=int(len(xs)),
+                     complete=complete) as sp:
+            _commit_inner(xs, ys, complete)
+        h_commit.observe(sp.duration_s)
+        if len(xs):
+            c_rows.inc(int(len(xs)))
+            c_shards.inc(1)
+
+    def _commit_inner(xs, ys, complete):
         i = len(shards)
         if len(xs):
             _write_npy_atomic(directory, f"{_shard_base(i)}.x.npy", xs)
@@ -428,6 +458,7 @@ def ingest(batches, directory: str, *, shard_rows: int = 65536,
             yb = None if yb is None else yb[take:]
             if not len(xb):
                 continue
+        c_batches.inc(1)
         buf_x.append(xb)
         if yb is not None:
             buf_y.append(yb)

@@ -138,6 +138,9 @@ def main(argv=None):
                          "beyond)")
     ap.add_argument("--resume", action="store_true",
                     help="continue a crashed ingest (fingerprint-checked)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="after the ingest, write the process metrics "
+                         "registry as Prometheus text ('-' for stdout)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -165,6 +168,9 @@ def main(argv=None):
           f"{store.n_shards} shards at {args.out} "
           f"(train: python -m repro.launch.train_forest --data-dir "
           f"{args.out})")
+    if args.metrics_dump:
+        from repro.launch.metrics import dump
+        dump(args.metrics_dump)
     return store
 
 

@@ -23,7 +23,12 @@ Serving properties (carried over from PR 4, upgraded in PR 6):
 * unknown sampler names raise ``ValueError`` at ``submit()``/``generate()``
   time, to the caller — not inside the dispatcher after a wasted dispatch;
 * ``stats`` carries per-sampler splits and a queue-wait vs device-time
-  breakdown next to the PR-4 aggregate counters.
+  breakdown next to the PR-4 aggregate counters — since PR 8 it is a view
+  over one shared :class:`~repro.obs.MetricsRegistry` (``server.metrics``)
+  fed by ``serve.queue``/``serve.device``/``serve.sync`` spans on
+  ``server.tracer``; ``--metrics-dump`` writes the same numbers as
+  Prometheus text and ``--trace-jsonl`` dumps the span ring (see
+  docs/observability.md).
 
 CPU demo (fits a small model, saves, loads, serves):
 
@@ -39,12 +44,12 @@ from __future__ import annotations
 import argparse
 import os
 import tempfile
-import time
 from concurrent.futures import Future
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving import (AdmissionController, InflightScheduler,
                            ModelRegistry)
 from repro.serving.registry import DEFAULT_BUCKETS  # noqa: F401 — re-export
@@ -72,15 +77,24 @@ class ForestServer:
                  coalesce_window_s: float = 0.002,
                  inflight_depth: int = 2,
                  sync_resolve: bool = False,
-                 admission: Optional[AdmissionController] = None):
-        self.registry = ModelRegistry(mesh=mesh, impl=impl, buckets=buckets)
+                 admission: Optional[AdmissionController] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        # one registry + tracer shared by every component of this server:
+        # scheduler, admission, and model registry export one family set
+        self.metrics = metrics or MetricsRegistry()
+        self.tracer = tracer or Tracer()
+        self.registry = ModelRegistry(mesh=mesh, impl=impl, buckets=buckets,
+                                      metrics=self.metrics)
         self.registry.register(self.MODEL, artifacts, schema=schema,
                                samplers=samplers)
         self.scheduler = InflightScheduler(
-            self.registry, admission,
+            self.registry,
+            admission or AdmissionController(metrics=self.metrics),
             max_coalesce_rows=max_coalesce_rows,
             coalesce_window_s=coalesce_window_s,
-            inflight_depth=inflight_depth, sync_resolve=sync_resolve)
+            inflight_depth=inflight_depth, sync_resolve=sync_resolve,
+            metrics=self.metrics, tracer=self.tracer)
         self.mesh = self.registry.mesh
         self.impl = impl
         self.schema = schema
@@ -137,10 +151,11 @@ class ForestServer:
         """Synchronous path: exact per-(n, seed) deterministic output."""
         name = self._validate_sampler(sampler)
         handle = self.registry.acquire(self.MODEL)
-        t0 = time.monotonic()
-        X, y = handle.generate(n, name, seed=seed)
+        with self.tracer.span("serve.sync", model=self.MODEL, sampler=name,
+                              rows=int(n)) as sp:
+            X, y = handle.generate(n, name, seed=seed)
         self.scheduler.record_sync(n=n, sampler=name, tenant="default",
-                                   wall_s=time.monotonic() - t0)
+                                   wall_s=sp.duration_s)
         return X, y
 
     def submit(self, n: int, *, sampler: Optional[str] = None,
@@ -221,6 +236,11 @@ def main():
                     help="disable in-flight batching (PR-4 drain-then-serve "
                          "reference behavior)")
     ap.add_argument("--coalesce-window-ms", type=float, default=2.0)
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="after serving, write the metrics registry as "
+                         "Prometheus text ('-' for stdout)")
+    ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                    help="after serving, dump the span ring as JSON lines")
     args = ap.parse_args()
 
     path = args.artifacts
@@ -259,6 +279,12 @@ def main():
           f"({int(s['coalesced_requests'])} coalesced) "
           f"in {s['gen_s']:.3f}s -> {server.rows_per_sec():.0f} rows/sec; "
           f"queue-wait {s['queue_wait_s']:.3f}s vs device {s['device_s']:.3f}s")
+    if args.metrics_dump:
+        from repro.launch.metrics import dump
+        dump(args.metrics_dump, registries=[server.metrics])
+    if args.trace_jsonl:
+        n_spans = server.tracer.export_jsonl(args.trace_jsonl)
+        print(f"wrote {n_spans} spans to {args.trace_jsonl}")
 
 
 if __name__ == "__main__":

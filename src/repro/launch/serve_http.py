@@ -3,7 +3,7 @@
 Drives the heavy-traffic story end to end: many named models hot in one
 process (LRU device placement), interactive/bulk priority classes,
 per-tenant rate limits with explicit backpressure, in-flight micro-batched
-dispatch — all behind five endpoints:
+dispatch — all behind six endpoints:
 
   POST /v1/generate   {"model": "demo", "n": 128, "sampler": "euler",
                        "tenant": "t0", "priority": "interactive",
@@ -22,6 +22,10 @@ dispatch — all behind five endpoints:
   GET  /healthz       {"ok": true} once the plane is serving
   GET  /statz         scheduler + admission + registry stats (per-sampler,
                       per-tenant, queue-wait vs device-time breakdown)
+  GET  /metrics       the same numbers in Prometheus text format — /statz
+                      is a view over the one :mod:`repro.obs` registry
+                      behind this endpoint, so the two cannot disagree
+                      (see docs/observability.md for the scrape config)
 
 Run a demo instance (fits a tiny model, registers it as "demo"):
 
@@ -49,6 +53,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.obs import CONTENT_TYPE as _METRICS_CONTENT_TYPE
+from repro.obs import MetricsRegistry, Tracer, render_prometheus
 from repro.serving import (AdmissionController, DeadlineExceeded,
                            InflightScheduler, ModelRegistry, QueueFull,
                            RateLimited, UnknownModel)
@@ -65,13 +71,16 @@ class ServingApp:
                  admission: Optional[AdmissionController] = None, *,
                  coalesce_window_s: float = 0.002,
                  max_coalesce_rows: Optional[int] = None,
-                 default_timeout_s: float = 300.0):
+                 default_timeout_s: float = 300.0,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.registry = registry
-        self.admission = admission or AdmissionController()
+        self.admission = admission or AdmissionController(metrics=metrics)
         self.scheduler = InflightScheduler(
             registry, self.admission,
             coalesce_window_s=coalesce_window_s,
-            max_coalesce_rows=max_coalesce_rows)
+            max_coalesce_rows=max_coalesce_rows,
+            metrics=metrics, tracer=tracer)
         self.default_timeout_s = float(default_timeout_s)
 
     # -- endpoint bodies (status_code, payload) ------------------------------
@@ -153,6 +162,16 @@ class ServingApp:
                      "admission": self.admission.stats_snapshot(),
                      "registry": self.registry.stats_snapshot()}
 
+    def metrics_text(self) -> Tuple[int, str]:
+        """Prometheus text over every component registry.  When the caller
+        wired one shared :class:`~repro.obs.MetricsRegistry` through (as
+        ``main()`` does) this is a single registry; components left on
+        private registries are unioned — instrument names are namespaced
+        per subsystem, so families never collide."""
+        return 200, render_prometheus(self.scheduler.metrics,
+                                      self.admission.metrics,
+                                      self.registry.metrics)
+
     def stop(self) -> None:
         self.scheduler.stop()
 
@@ -177,13 +196,26 @@ def make_handler(app: ServingApp, *, quiet: bool = True):
             self.end_headers()
             self.wfile.write(blob)
 
+        def _reply_text(self, status: int, text: str,
+                        content_type: str) -> None:
+            blob = text.encode()
+            self.send_response(status)
+            self.send_header("Content-Type", content_type)
+            self.send_header("Content-Length", str(len(blob)))
+            self.end_headers()
+            self.wfile.write(blob)
+
         def do_GET(self):  # noqa: N802
+            if self.path == "/metrics":
+                status, text = app.metrics_text()
+                self._reply_text(status, text, _METRICS_CONTENT_TYPE)
+                return
             routes = {"/healthz": app.healthz, "/statz": app.statz,
                       "/v1/models": app.models}
             fn = routes.get(self.path)
             if fn is None:
                 self._reply(404, {"error": f"no route {self.path!r}",
-                                  "routes": sorted(routes)})
+                                  "routes": sorted(routes) + ["/metrics"]})
                 return
             self._reply(*fn())
 
@@ -259,6 +291,9 @@ def main(argv=None):
     ap.add_argument("--coalesce-window-ms", type=float, default=2.0)
     ap.add_argument("--no-warm", action="store_true",
                     help="skip the (sampler, bucket) warmup compile pass")
+    ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                    help="on shutdown, dump the span ring (serve.queue / "
+                         "serve.device / serve.sync) as JSON lines")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per HTTP request")
     args = ap.parse_args(argv)
@@ -276,12 +311,16 @@ def main(argv=None):
         specs.append(("demo", path))
 
     from repro.launch.train_forest import parse_mesh
+    # one shared registry + tracer across every component: GET /metrics is
+    # then a single family set and /statz a view over the same instruments
+    metrics = MetricsRegistry()
+    tracer = Tracer(capacity=4096)
     registry = ModelRegistry(
         mesh=parse_mesh(args.mesh), impl=args.impl,
         buckets=tuple(int(b) for b in args.buckets.split(",")),
         device_budget_bytes=None if args.device_budget_mb is None
         else int(args.device_budget_mb * 2**20),
-        max_hot=args.max_hot)
+        max_hot=args.max_hot, metrics=metrics)
     for name, path in specs:
         registry.register(name, path=path)
         print(f"registered model {name!r} from {path}", flush=True)
@@ -289,9 +328,11 @@ def main(argv=None):
         queue_limits={"interactive": args.queue_limit_interactive,
                       "bulk": args.queue_limit_bulk},
         default_rate=None if args.rate is None
-        else (args.rate, args.burst or 4 * args.rate))
+        else (args.rate, args.burst or 4 * args.rate),
+        metrics=metrics)
     app = ServingApp(registry, admission,
-                     coalesce_window_s=args.coalesce_window_ms / 1e3)
+                     coalesce_window_s=args.coalesce_window_ms / 1e3,
+                     metrics=metrics, tracer=tracer)
     if not args.no_warm:
         print(f"warming {len(specs)} model(s)...", flush=True)
         dt = registry.warmup()
@@ -309,6 +350,9 @@ def main(argv=None):
         print("shutting down...", flush=True)
         httpd.server_close()
         app.stop()
+        if args.trace_jsonl:
+            n = tracer.export_jsonl(args.trace_jsonl)
+            print(f"wrote {n} spans to {args.trace_jsonl}", flush=True)
         print("bye", flush=True)
 
 

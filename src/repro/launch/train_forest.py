@@ -93,6 +93,10 @@ def main(argv=None):
                          "thread instead of the async writer thread")
     ap.add_argument("--out", default=None,
                     help="base path for the saved .npz/.json artifact pair")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="after the fit, write the process metrics "
+                         "registry as Prometheus text ('-' for stdout); "
+                         "see docs/observability.md")
     ap.add_argument("--seed", type=int, default=0)
     # ForestConfig knobs (paper Table 9 names)
     ap.add_argument("--method", default="flow",
@@ -180,6 +184,10 @@ def main(argv=None):
         print(f"artifacts saved to {base}.npz / {base}.json "
               f"(serve: python -m repro.launch.serve_forest "
               f"--artifacts {base})")
+
+    if args.metrics_dump:
+        from repro.launch.metrics import dump
+        dump(args.metrics_dump)
 
 
 if __name__ == "__main__":

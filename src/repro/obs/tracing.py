@@ -1,0 +1,188 @@
+"""Lightweight span tracing: ring-buffered, queryable, cross-thread safe.
+
+A :class:`Span` is a named interval with attributes; a :class:`Tracer`
+collects completed spans into a bounded ring (old spans evict, memory is
+O(capacity) forever).  Two usage shapes:
+
+* ``with tracer.span("fit.dispatch", batch=3) as sp:`` — scoped work on
+  one thread.  Nesting is tracked per-thread, so ``sp.parent_id`` links
+  child to parent and a flamegraph falls out of the JSONL export.
+* ``sp = tracer.start("serve.queue", ...); ... sp.end()`` — intervals
+  that *cross* threads (a request enqueued on the HTTP thread and claimed
+  by the scheduler thread).  This is how the serving hot path measures
+  queue-wait and device-time: span durations, not hand-stamped deltas.
+
+``tracer.spans(name=...)`` queries completed spans (oldest first);
+``tracer.export_jsonl(path)`` dumps them for offline tooling.  Setting
+``REPRO_OBS_JAX_TRACE=1`` (or ``Tracer(jax_annotations=True)``) wraps
+scoped spans in ``jax.profiler.TraceAnnotation`` so they show up on the
+device timeline in a jax profiler capture — resolved lazily per span, so
+this module stays importable without jax and never snapshots the env at
+import time.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+__all__ = ["Span", "Tracer"]
+
+
+class Span:
+    """One timed interval.  Create via ``Tracer.start`` / ``Tracer.span``."""
+
+    __slots__ = ("name", "attrs", "span_id", "parent_id", "thread",
+                 "t_start", "t_end", "_tracer")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: Dict[str, object],
+                 span_id: int, parent_id: Optional[int]):
+        self.name = name
+        self.attrs = attrs
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.thread = threading.current_thread().name
+        self.t_start = time.monotonic()
+        self.t_end: Optional[float] = None
+        self._tracer = tracer
+
+    @property
+    def duration_s(self) -> float:
+        """Seconds from start to end (to *now* while still open)."""
+        end = self.t_end if self.t_end is not None else time.monotonic()
+        return end - self.t_start
+
+    def end(self, **attrs) -> float:
+        """Close the span (idempotent), record it, return the duration.
+
+        Extra keyword attributes merge in at close — e.g.
+        ``sp.end(outcome="deadline")`` on the drop path.
+        """
+        if self.t_end is None:
+            self.t_end = time.monotonic()
+            if attrs:
+                self.attrs.update(attrs)
+            self._tracer._record(self)
+        return self.t_end - self.t_start
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "span_id": self.span_id,
+            "parent_id": self.parent_id,
+            "thread": self.thread,
+            "t_start": self.t_start,
+            "t_end": self.t_end,
+            "duration_s": None if self.t_end is None else self.duration_s,
+            "attrs": self.attrs,
+        }
+
+    def __repr__(self):
+        state = f"{self.duration_s * 1e3:.2f}ms" if self.t_end else "open"
+        return f"Span({self.name!r}, {state}, attrs={self.attrs!r})"
+
+
+class Tracer:
+    """Bounded ring of completed spans + per-thread nesting stacks.
+
+    ``capacity`` bounds memory: the ring holds the newest N completed
+    spans and silently evicts the oldest.  All mutation happens under one
+    lock; ``start``/``end`` are a few dict ops, cheap enough for the
+    serving hot path (one queue span per request, one device span per
+    batch).
+    """
+
+    def __init__(self, capacity: int = 2048,
+                 jax_annotations: Optional[bool] = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._jax_annotations = jax_annotations
+        self._lock = threading.Lock()
+        self._ring: deque = deque(maxlen=capacity)
+        self._ids = itertools.count(1)
+        self._tls = threading.local()
+
+    # -- internals -----------------------------------------------------------
+
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def _record(self, span: Span) -> None:
+        with self._lock:
+            self._ring.append(span)
+
+    def _jax_annotation(self, name: str):
+        """A ``jax.profiler.TraceAnnotation`` for scoped spans, or a
+        null context.  The env knob is read per call, not at import."""
+        on = self._jax_annotations
+        if on is None:
+            on = os.environ.get("REPRO_OBS_JAX_TRACE", "") not in ("", "0")
+        if not on:
+            return contextlib.nullcontext()
+        try:
+            from jax.profiler import TraceAnnotation
+        except Exception:
+            return contextlib.nullcontext()
+        return TraceAnnotation(name)
+
+    # -- span creation -------------------------------------------------------
+
+    def start(self, name: str, **attrs) -> Span:
+        """Begin a span that may end on a *different* thread.
+
+        The parent link comes from the starting thread's active scoped
+        span (if any).  Call ``span.end()`` to close and record it.
+        """
+        st = self._stack()
+        parent = st[-1].span_id if st else None
+        return Span(self, name, attrs, next(self._ids), parent)
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs):
+        """Scoped span: times the ``with`` body, tracks nesting."""
+        sp = self.start(name, **attrs)
+        st = self._stack()
+        st.append(sp)
+        try:
+            with self._jax_annotation(name):
+                yield sp
+        finally:
+            st.pop()
+            sp.end()
+
+    # -- read side -----------------------------------------------------------
+
+    def spans(self, name: Optional[str] = None,
+              prefix: Optional[str] = None) -> List[Span]:
+        """Completed spans, oldest first, optionally filtered."""
+        with self._lock:
+            out = list(self._ring)
+        if name is not None:
+            out = [s for s in out if s.name == name]
+        if prefix is not None:
+            out = [s for s in out if s.name.startswith(prefix)]
+        return out
+
+    def durations(self, name: str) -> List[float]:
+        return [s.duration_s for s in self.spans(name=name)]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    def export_jsonl(self, path: str) -> int:
+        """Write completed spans as JSON lines; returns the span count."""
+        spans = self.spans()
+        with open(path, "w") as f:
+            for s in spans:
+                f.write(json.dumps(s.to_dict(), default=str) + "\n")
+        return len(spans)

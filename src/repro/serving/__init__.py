@@ -13,6 +13,16 @@ Layers (each its own module, composable):
   batch ``k``), priority-ordered coalescing, per-sampler / per-tenant
   stats with queue-wait vs device-time breakdown.
 
+Since PR 8 every layer keeps its counters on a
+:class:`repro.obs.MetricsRegistry` (typed instruments, one lock, one
+consistent snapshot) and the scheduler times the request path with
+:class:`repro.obs.Tracer` spans (``serve.queue`` / ``serve.device`` /
+``serve.sync``) instead of hand-stamped timestamps. The legacy
+``stats`` / ``stats_snapshot()`` dict shapes are preserved as *views*
+over those instruments, and :func:`repro.obs.render_prometheus` exposes
+the same registries as ``GET /metrics`` — the two can never disagree.
+See docs/observability.md.
+
 Front ends: :class:`repro.launch.serve_forest.ForestServer` (single-model,
 in-process) and :mod:`repro.launch.serve_http` (multi-model HTTP API).
 """

@@ -22,6 +22,16 @@ explicit:
 ``offer``/``pop``/``pop_matching`` are the scheduler-facing queue API; the
 batch former uses ``pop_matching`` to coalesce same-(model, sampler)
 requests across both priority classes while leaving everything else queued.
+
+Per-tenant accounting lives in :mod:`repro.obs` instruments
+(``admission_requests_total{tenant,outcome}`` etc.) rather than a bare
+dict: the PR-6 implementation grew per-tenant stats via a ``setdefault``
+helper whose lock discipline was implicit in "every caller happens to hold
+``_cond``" — exactly the pattern jaxlint's TH001 now flags (see
+``tests/test_jaxlint.py``).  Instruments are internally lock-guarded, the
+queue-depth gauge is updated under ``_cond`` alongside the deques it
+mirrors, and ``stats_snapshot()`` keeps its dict shape as a fold over the
+registry.
 """
 from __future__ import annotations
 
@@ -30,11 +40,15 @@ import time
 from collections import deque
 from typing import Dict, Optional, Tuple
 
+from repro.obs import MetricsRegistry
+
 PRIORITIES = ("interactive", "bulk")
 
 #: ``pop()`` returns this once the controller is closed *and* drained —
 #: requests accepted before ``close()`` are always served first.
 CLOSED = object()
+
+_OUTCOMES = ("admitted", "rejected_rate", "rejected_queue")
 
 
 class AdmissionError(RuntimeError):
@@ -92,7 +106,9 @@ class AdmissionController:
     ``tenant_rates`` maps tenant name -> ``(rate_rows_per_s, burst_rows)``;
     ``default_rate`` (same tuple) applies to tenants without an explicit
     entry, ``None`` meaning unmetered. ``queue_limits`` bounds the number of
-    queued requests per priority class.
+    queued requests per priority class.  ``metrics`` shares a
+    :class:`~repro.obs.MetricsRegistry` with the other serving components
+    (default: a private registry, so tests never share counters).
     """
 
     DEFAULT_QUEUE_LIMITS = {"interactive": 256, "bulk": 1024}
@@ -100,7 +116,8 @@ class AdmissionController:
     def __init__(self, *, queue_limits: Optional[Dict[str, int]] = None,
                  tenant_rates: Optional[Dict[str, Tuple[float, float]]] = None,
                  default_rate: Optional[Tuple[float, float]] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 metrics: Optional[MetricsRegistry] = None):
         self.queue_limits = dict(self.DEFAULT_QUEUE_LIMITS)
         self.queue_limits.update(queue_limits or {})
         self._rates = dict(tenant_rates or {})
@@ -110,16 +127,28 @@ class AdmissionController:
         self._cond = threading.Condition()
         self._queues = {p: deque() for p in PRIORITIES}
         self._closed = False
-        self.stats: Dict[str, dict] = {}  # per-tenant counters
+        self.metrics = metrics or MetricsRegistry()
+        self._m_requests = self.metrics.counter(
+            "admission_requests", "Admission decisions by tenant and "
+            "outcome (admitted / rejected_rate / rejected_queue)",
+            ("tenant", "outcome"))
+        self._m_rows = self.metrics.counter(
+            "admission_rows", "Rows admitted past the front door",
+            ("tenant",))
+        self._m_queued = self.metrics.gauge(
+            "admission_queued", "Requests waiting per priority class",
+            ("priority",))
+        self._m_queue_limit = self.metrics.gauge(
+            "admission_queue_limit", "Configured queue bound per priority "
+            "class", ("priority",))
+        for p in PRIORITIES:
+            self._m_queued.set(0, priority=p)
+            self._m_queue_limit.set(self.queue_limits[p], priority=p)
 
     # -- tenant accounting ---------------------------------------------------
 
-    def _tenant_stats(self, tenant: str) -> dict:
-        return self.stats.setdefault(tenant, {
-            "admitted": 0, "rows": 0, "rejected_rate": 0,
-            "rejected_queue": 0})
-
-    def _bucket_for(self, tenant: str) -> Optional[TokenBucket]:
+    def _bucket_for_locked(self, tenant: str) -> Optional[TokenBucket]:
+        """Caller holds ``_cond`` (buckets are mutated lazily here)."""
         if tenant in self._buckets:
             return self._buckets[tenant]
         spec = self._rates.get(tenant, self._default_rate)
@@ -133,16 +162,16 @@ class AdmissionController:
         """Meter ``rows`` against ``tenant``'s bucket without queueing —
         the unbatched paths (HTTP ``/v1/impute``) pay for device time too."""
         with self._cond:
-            bucket = self._bucket_for(tenant)
+            bucket = self._bucket_for_locked(tenant)
             if bucket is not None:
                 retry = bucket.take(rows, self._clock())
                 if retry is not None:
-                    self._tenant_stats(tenant)["rejected_rate"] += 1
+                    self._m_requests.inc(1, tenant=tenant,
+                                         outcome="rejected_rate")
                     raise RateLimited(
                         f"tenant {tenant!r} over its row rate", retry)
-            st = self._tenant_stats(tenant)
-            st["admitted"] += 1
-            st["rows"] += rows
+            self._m_requests.inc(1, tenant=tenant, outcome="admitted")
+            self._m_rows.inc(rows, tenant=tenant)
 
     # -- queue API (scheduler-facing) ----------------------------------------
 
@@ -156,26 +185,28 @@ class AdmissionController:
         with self._cond:
             if self._closed:
                 raise QueueFull("server is shutting down", 1.0)
-            bucket = self._bucket_for(req.tenant)
+            bucket = self._bucket_for_locked(req.tenant)
             if bucket is not None:
                 retry = bucket.take(req.n, self._clock())
                 if retry is not None:
-                    self._tenant_stats(req.tenant)["rejected_rate"] += 1
+                    self._m_requests.inc(1, tenant=req.tenant,
+                                         outcome="rejected_rate")
                     raise RateLimited(
                         f"tenant {req.tenant!r} over its row rate "
                         f"({req.n} rows)", retry)
             q = self._queues[req.priority]
             limit = self.queue_limits[req.priority]
             if len(q) >= limit:
-                self._tenant_stats(req.tenant)["rejected_queue"] += 1
+                self._m_requests.inc(1, tenant=req.tenant,
+                                     outcome="rejected_queue")
                 # no reservation to base an estimate on; one dispatch
                 # window is the cheapest honest hint
                 raise QueueFull(
                     f"{req.priority} queue at its bound ({limit})", 0.05)
-            st = self._tenant_stats(req.tenant)
-            st["admitted"] += 1
-            st["rows"] += req.n
+            self._m_requests.inc(1, tenant=req.tenant, outcome="admitted")
+            self._m_rows.inc(req.n, tenant=req.tenant)
             q.append(req)
+            self._m_queued.set(len(q), priority=req.priority)
             self._cond.notify()
 
     def pop(self, timeout: Optional[float] = None):
@@ -186,7 +217,9 @@ class AdmissionController:
             while True:
                 for p in PRIORITIES:
                     if self._queues[p]:
-                        return self._queues[p].popleft()
+                        req = self._queues[p].popleft()
+                        self._m_queued.set(len(self._queues[p]), priority=p)
+                        return req
                 if self._closed:
                     return CLOSED
                 left = (None if deadline is None
@@ -210,6 +243,7 @@ class AdmissionController:
                         if (r.model == model and r.sampler == sampler
                                 and r.n <= max_rows):
                             del q[i]
+                            self._m_queued.set(len(q), priority=p)
                             return r
                 if self._closed:
                     return None
@@ -234,8 +268,35 @@ class AdmissionController:
         with self._cond:
             return {p: len(q) for p, q in self._queues.items()}
 
+    # -- read side -----------------------------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, dict]:
+        """Per-tenant counters, PR-6 dict shape — a read-only view folded
+        from the metrics registry (the mutable dict it replaces was the
+        TH001 lock-discipline bug this PR fixed)."""
+        return self._tenants_view()
+
+    def _tenants_view(self) -> Dict[str, dict]:
+        with self.metrics.lock:
+            req = self._m_requests.series()   # (tenant, outcome) -> n
+            rows = self._m_rows.series()      # (tenant,) -> n
+        tenants = {t for t, _ in req} | {t for (t,) in rows}
+        return {
+            t: {
+                "admitted": int(req.get((t, "admitted"), 0)),
+                "rows": int(rows.get((t,), 0)),
+                "rejected_rate": int(req.get((t, "rejected_rate"), 0)),
+                "rejected_queue": int(req.get((t, "rejected_queue"), 0)),
+            }
+            for t in sorted(tenants)
+        }
+
     def stats_snapshot(self) -> dict:
+        """PR-6 shape (``queued`` / ``queue_limits`` / ``tenants``), folded
+        from the same instruments ``GET /metrics`` exports."""
         with self._cond:
-            return {"queued": {p: len(q) for p, q in self._queues.items()},
-                    "queue_limits": dict(self.queue_limits),
-                    "tenants": {t: dict(s) for t, s in self.stats.items()}}
+            queued = {p: len(q) for p, q in self._queues.items()}
+        return {"queued": queued,
+                "queue_limits": dict(self.queue_limits),
+                "tenants": self._tenants_view()}

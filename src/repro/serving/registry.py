@@ -33,6 +33,7 @@ from typing import Dict, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry
 from repro.tabgen import TabularGenerator, default_sampler
 from repro.tabgen.artifacts import _LEAF_FIELDS, ForestArtifacts
 from repro.tabgen.sampling import resolve_mesh, sample_labels
@@ -145,7 +146,10 @@ class _Entry:
     host_artifacts: ForestArtifacts   # canonical host copy (survives demote)
     hot: bool
     last_used: int
-    stats: dict
+
+
+#: lifecycle events tracked per model in ``registry_model_events_total``
+_EVENTS = ("acquires", "promotions", "demotions", "swaps")
 
 
 class ModelRegistry:
@@ -165,7 +169,8 @@ class ModelRegistry:
     def __init__(self, *, mesh=None, impl: Optional[str] = None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  device_budget_bytes: Optional[int] = None,
-                 max_hot: Optional[int] = None):
+                 max_hot: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.mesh = resolve_mesh(mesh)
         self.impl = impl
         self.buckets = tuple(sorted(buckets))
@@ -174,6 +179,18 @@ class ModelRegistry:
         self._lock = threading.RLock()
         self._entries: Dict[str, _Entry] = {}
         self._seq = 0
+        self.metrics = metrics or MetricsRegistry()
+        self._m_events = self.metrics.counter(
+            "registry_model_events", "Model lifecycle events (acquires / "
+            "promotions / demotions / swaps)", ("model", "event"))
+        self._m_hot_bytes = self.metrics.gauge(
+            "registry_hot_bytes", "Summed pytree bytes of device-placed "
+            "(hot) models")
+        self._m_hot_models = self.metrics.gauge(
+            "registry_hot_models", "Models currently device-placed")
+        self._m_models = self.metrics.gauge(
+            "registry_models", "Models registered (hot or cold)")
+        self._sync_gauges_locked()
 
     # -- internals (call with the lock held) ---------------------------------
 
@@ -207,7 +224,14 @@ class ModelRegistry:
             entry.handle = self._build_handle(
                 name, entry.host_artifacts, entry.handle, hot=False)
             entry.hot = False
-            entry.stats["demotions"] += 1
+            self._m_events.inc(1, model=name, event="demotions")
+
+    def _sync_gauges_locked(self) -> None:
+        """Mirror the hot set into gauges (caller holds the lock, so the
+        gauges can never drift from the table they describe)."""
+        self._m_hot_bytes.set(self._hot_bytes())
+        self._m_hot_models.set(self._hot_count())
+        self._m_models.set(len(self._entries))
 
     def _build_handle(self, name: str, host_artifacts: ForestArtifacts,
                       like: ModelHandle, *, hot: bool,
@@ -243,11 +267,14 @@ class ModelRegistry:
             handle = self._build_handle(name, host, seed_handle, hot=hot)
             self._entries[name] = _Entry(
                 handle=handle, host_artifacts=host, hot=hot,
-                last_used=self._tick(),
-                stats={"acquires": 0, "promotions": 0, "demotions": 0,
-                       "swaps": 0})
+                last_used=self._tick())
+            # re-registering a name wipes its event counters (the legacy
+            # per-entry stats dict was rebuilt here); scrapers see a
+            # normal counter reset
+            self._m_events.reset(model=name)
             if hot:
                 self._demote_lru(keep=name)
+            self._sync_gauges_locked()
             return handle
 
     def swap(self, name: str, artifacts: ForestArtifacts, *,
@@ -271,9 +298,10 @@ class ModelRegistry:
                 version=old.version + 1)
             entry.host_artifacts = host
             entry.last_used = self._tick()
-            entry.stats["swaps"] += 1
+            self._m_events.inc(1, model=name, event="swaps")
             if entry.hot:
                 self._demote_lru(keep=name)
+            self._sync_gauges_locked()
             return entry.handle
 
     def acquire(self, name: str) -> ModelHandle:
@@ -287,10 +315,11 @@ class ModelRegistry:
                 entry.handle = self._build_handle(
                     name, entry.host_artifacts, entry.handle, hot=True)
                 entry.hot = True
-                entry.stats["promotions"] += 1
+                self._m_events.inc(1, model=name, event="promotions")
                 self._demote_lru(keep=name)
+                self._sync_gauges_locked()
             entry.last_used = self._tick()
-            entry.stats["acquires"] += 1
+            self._m_events.inc(1, model=name, event="acquires")
             return entry.handle
 
     def peek(self, name: str) -> ModelHandle:
@@ -315,8 +344,11 @@ class ModelRegistry:
             return sorted(n for n, e in self._entries.items() if e.hot)
 
     def describe(self) -> dict:
-        """Per-model status for ``/v1/models`` and ``/statz``."""
+        """Per-model status for ``/v1/models`` and ``/statz``.  Event
+        counts are a view over ``registry_model_events_total`` — the same
+        series ``GET /metrics`` exports."""
         with self._lock:
+            events = self._m_events.series()   # (model, event) -> n
             return {
                 name: {
                     "hot": e.hot,
@@ -326,7 +358,8 @@ class ModelRegistry:
                     "buckets": list(e.handle.buckets),
                     "n_features": e.handle.artifacts.p,
                     "n_classes": e.handle.artifacts.n_y,
-                    **e.stats,
+                    **{ev: int(events.get((name, ev), 0))
+                       for ev in _EVENTS},
                 }
                 for name, e in self._entries.items()}
 

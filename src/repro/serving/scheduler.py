@@ -33,6 +33,16 @@ admission controller rate-limits and bounds queues
 :class:`~repro.serving.admission.QueueFull`), expired deadlines fail with
 :class:`~repro.serving.admission.DeadlineExceeded` before any device time
 is spent, and cancelled futures are dropped at batch-claim time.
+
+Observability (PR 8): every request carries a ``serve.queue`` span from
+``submit()`` to batch-claim, and every dispatched batch a ``serve.device``
+span from dispatch to resolution — queue-wait vs device-time is *span
+durations*, not hand-stamped timestamp deltas, and the same spans feed the
+:mod:`repro.obs` instruments behind ``stats_snapshot()`` (whose dict shape
+is unchanged since PR 6), ``/statz``, and ``GET /metrics``.  Pass a shared
+``metrics=``/``tracer=`` pair (as ``serve_http`` does) to co-export with
+the admission controller and model registry; the default is a private pair
+per scheduler so tests and benchmark arms never share counters.
 """
 from __future__ import annotations
 
@@ -43,6 +53,7 @@ import time
 from concurrent.futures import Future
 from typing import List, Optional
 
+from repro.obs import MetricsRegistry, Tracer
 from repro.serving.admission import (CLOSED, AdmissionController,
                                      DeadlineExceeded)
 from repro.serving.registry import ModelRegistry, UnknownModel  # noqa: F401
@@ -54,6 +65,8 @@ from repro.serving.registry import ModelRegistry, UnknownModel  # noqa: F401
 BATCH_SEED_BASE = 1 << 20
 
 _SHUTDOWN = object()
+
+_EMPTY_HIST = {"buckets": (), "sum": 0.0, "count": 0}
 
 
 @dataclasses.dataclass
@@ -68,6 +81,7 @@ class Request:
     priority: str = "interactive"
     enqueued_s: float = dataclasses.field(default_factory=time.monotonic)
     deadline_s: Optional[float] = None  # absolute time.monotonic()
+    span: Optional[object] = None       # serve.queue span (set by submit)
 
 
 @dataclasses.dataclass
@@ -77,28 +91,7 @@ class _Inflight:
     sample: object            # SampleHandle / _DecodingHandle
     batch: List[Request]
     total_rows: int
-    t_dispatch: float
-
-
-def _new_stats() -> dict:
-    return {
-        "requests": 0, "rows": 0, "gen_s": 0.0, "warm_s": 0.0,
-        "batches": 0, "coalesced_requests": 0,
-        "queue_wait_s": 0.0, "device_s": 0.0,
-        "dropped_deadline": 0, "max_inflight_observed": 0,
-        "per_sampler": {}, "per_tenant": {},
-    }
-
-
-def _sampler_slot(stats: dict, sampler: str) -> dict:
-    return stats["per_sampler"].setdefault(sampler, {
-        "requests": 0, "rows": 0, "batches": 0,
-        "queue_wait_s": 0.0, "device_s": 0.0})
-
-
-def _tenant_slot(stats: dict, tenant: str) -> dict:
-    return stats["per_tenant"].setdefault(tenant, {
-        "requests": 0, "rows": 0, "queue_wait_s": 0.0})
+    span: object              # serve.device span (dispatch -> resolution)
 
 
 class InflightScheduler:
@@ -107,7 +100,9 @@ class InflightScheduler:
                  max_coalesce_rows: Optional[int] = None,
                  coalesce_window_s: float = 0.002,
                  inflight_depth: int = 2,
-                 sync_resolve: bool = False):
+                 sync_resolve: bool = False,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.registry = registry
         self.admission = admission or AdmissionController()
         # default row cap = the largest bucket: coalescing past it would
@@ -119,10 +114,38 @@ class InflightScheduler:
         self.coalesce_window_s = float(coalesce_window_s)
         self.inflight_depth = int(inflight_depth)
         self.sync_resolve = bool(sync_resolve)
-        self.stats = _new_stats()
-        self._stats_lock = threading.Lock()
+        self.metrics = metrics or MetricsRegistry()
+        self.tracer = tracer or Tracer()
+        m = self.metrics
+        self._m_requests = m.counter(
+            "serving_requests", "Generation requests resolved",
+            ("sampler", "tenant"))
+        self._m_rows = m.counter(
+            "serving_rows", "Rows generated and delivered",
+            ("sampler", "tenant"))
+        self._h_queue_wait = m.histogram(
+            "serving_queue_wait_seconds",
+            "Per-request wait from submit to batch dispatch "
+            "(serve.queue span durations)", ("sampler", "tenant"))
+        self._h_device = m.histogram(
+            "serving_device_seconds",
+            "Per-batch device time from dispatch to resolution "
+            "(serve.device span durations); count = batches", ("sampler",))
+        self._m_coalesced = m.counter(
+            "serving_coalesced_requests",
+            "Requests that rode a batch they did not open")
+        self._m_dropped = m.counter(
+            "serving_dropped_deadline",
+            "Requests dropped before dispatch: queued past their deadline")
+        self._m_warm = m.counter(
+            "serving_warmup_seconds", "Wall time spent in sampler warmup")
+        self._m_inflight = m.gauge(
+            "serving_inflight", "Dispatched-but-unresolved batches now")
+        self._m_inflight_max = m.gauge(
+            "serving_inflight_max",
+            "High-watermark of concurrently in-flight batches")
+        self._seed_lock = threading.Lock()
         self._batch_seed = 0
-        self._inflight = 0
         self._inflight_q: "queue.Queue" = queue.Queue(maxsize=self.inflight_depth)
         self._scheduler_t: Optional[threading.Thread] = None
         self._waiter_t: Optional[threading.Thread] = None
@@ -151,11 +174,14 @@ class InflightScheduler:
             raise ValueError(
                 f"model {model!r} does not serve sampler {name!r}; "
                 f"served: {list(handle.samplers)}")
-        now = time.monotonic()
+        span = self.tracer.start(
+            "serve.queue", model=model, sampler=name, tenant=tenant,
+            priority=priority, rows=int(n))
         req = Request(int(n), name, Future(), model=model, tenant=tenant,
-                      priority=priority, enqueued_s=now,
+                      priority=priority, enqueued_s=span.t_start,
                       deadline_s=None if deadline_s is None
-                      else now + float(deadline_s))
+                      else span.t_start + float(deadline_s),
+                      span=span)
         # enqueue under the lifecycle lock: a submit racing with stop()
         # could otherwise land behind the close with no threads left to
         # serve it — the lock serialises the two, so the request either
@@ -182,43 +208,87 @@ class InflightScheduler:
             self._waiter_t = None
 
     def rows_per_sec(self) -> float:
-        with self._stats_lock:
-            return self.stats["rows"] / max(self.stats["gen_s"], 1e-9)
+        with self.metrics.lock:
+            return self._m_rows.sum() / max(self._h_device.sum(), 1e-9)
+
+    @property
+    def stats(self) -> dict:
+        """The PR-4 dict surface, now a *view* over the metrics registry
+        (``server.stats["rows"]`` keeps working; see ``stats_snapshot``)."""
+        return self.stats_snapshot()
 
     def stats_snapshot(self) -> dict:
-        with self._stats_lock:
-            out = dict(self.stats)
-            out["per_sampler"] = {k: dict(v)
-                                  for k, v in self.stats["per_sampler"].items()}
-            out["per_tenant"] = {k: dict(v)
-                                 for k, v in self.stats["per_tenant"].items()}
-            out["inflight"] = self._inflight
-            return out
+        """Legacy-shaped stats dict folded from the metrics registry.
+
+        Same keys as the PR-6 hand-maintained dict (``requests``, ``rows``,
+        ``gen_s``, ``warm_s``, ``batches``, ``coalesced_requests``,
+        ``queue_wait_s``, ``device_s``, ``dropped_deadline``,
+        ``max_inflight_observed``, ``per_sampler``, ``per_tenant``,
+        ``inflight``) — but every number is derived from the same
+        instruments ``GET /metrics`` exports, so the two surfaces cannot
+        disagree.  The fold runs under the registry lock: one consistent
+        cut.
+        """
+        with self.metrics.lock:
+            req = self._m_requests.series()      # (sampler, tenant) -> n
+            rows = self._m_rows.series()
+            qw = self._h_queue_wait.series()     # (sampler, tenant) -> hist
+            dev = self._h_device.series()        # (sampler,) -> hist
+            coalesced = self._m_coalesced.get()
+            dropped = self._m_dropped.get()
+            warm = self._m_warm.get()
+            inflight = self._m_inflight.get()
+            inflight_max = self._m_inflight_max.get()
+        per_sampler = {}
+        for s in sorted({k[0] for k in req} | {k[0] for k in dev}):
+            d = dev.get((s,), _EMPTY_HIST)
+            per_sampler[s] = {
+                "requests": int(sum(v for k, v in req.items() if k[0] == s)),
+                "rows": int(sum(v for k, v in rows.items() if k[0] == s)),
+                "batches": int(d["count"]),
+                "queue_wait_s": sum(h["sum"] for k, h in qw.items()
+                                    if k[0] == s),
+                "device_s": d["sum"],
+            }
+        per_tenant = {}
+        for t in sorted({k[1] for k in req}):
+            per_tenant[t] = {
+                "requests": int(sum(v for k, v in req.items() if k[1] == t)),
+                "rows": int(sum(v for k, v in rows.items() if k[1] == t)),
+                "queue_wait_s": sum(h["sum"] for k, h in qw.items()
+                                    if k[1] == t),
+            }
+        device_s = sum(h["sum"] for h in dev.values())
+        return {
+            "requests": int(sum(req.values())),
+            "rows": int(sum(rows.values())),
+            "gen_s": device_s,
+            "warm_s": warm,
+            "batches": int(sum(h["count"] for h in dev.values())),
+            "coalesced_requests": int(coalesced),
+            "queue_wait_s": sum(h["sum"] for h in qw.values()),
+            "device_s": device_s,
+            "dropped_deadline": int(dropped),
+            "max_inflight_observed": int(inflight_max),
+            "per_sampler": per_sampler,
+            "per_tenant": per_tenant,
+            "inflight": int(inflight),
+        }
 
     # -- bookkeeping shared with the synchronous server path -----------------
 
     def record_warm(self, wall_s: float) -> None:
-        with self._stats_lock:
-            self.stats["warm_s"] += wall_s
+        self._m_warm.inc(wall_s)
 
     def record_sync(self, *, n: int, sampler: str, tenant: str,
                     wall_s: float) -> None:
         """Account a synchronous ``generate()`` served outside the queue
         (one request = one batch, zero queue wait)."""
-        with self._stats_lock:
-            self.stats["requests"] += 1
-            self.stats["rows"] += n
-            self.stats["gen_s"] += wall_s
-            self.stats["device_s"] += wall_s
-            self.stats["batches"] += 1
-            slot = _sampler_slot(self.stats, sampler)
-            slot["requests"] += 1
-            slot["rows"] += n
-            slot["batches"] += 1
-            slot["device_s"] += wall_s
-            ten = _tenant_slot(self.stats, tenant)
-            ten["requests"] += 1
-            ten["rows"] += n
+        with self.metrics.lock:
+            self._m_requests.inc(1, sampler=sampler, tenant=tenant)
+            self._m_rows.inc(n, sampler=sampler, tenant=tenant)
+            self._h_queue_wait.observe(0.0, sampler=sampler, tenant=tenant)
+            self._h_device.observe(wall_s, sampler=sampler)
 
     # -- threads -------------------------------------------------------------
 
@@ -246,8 +316,9 @@ class InflightScheduler:
             req.future.set_exception(DeadlineExceeded(
                 f"deadline lapsed {now - req.deadline_s:.3f}s ago while "
                 "queued"))
-        with self._stats_lock:
-            self.stats["dropped_deadline"] += 1
+        if req.span is not None:
+            req.span.end(outcome="deadline")
+        self._m_dropped.inc()
         return True
 
     def _scheduler_loop(self) -> None:
@@ -300,66 +371,69 @@ class InflightScheduler:
         # claim each future first: a client that cancelled while queued is
         # dropped here — set_result on a cancelled Future raises and would
         # otherwise kill the scheduler thread, stranding the whole batch
-        batch = [r for r in batch if r.future.set_running_or_notify_cancel()]
+        claimed = []
+        for r in batch:
+            if r.future.set_running_or_notify_cancel():
+                claimed.append(r)
+            elif r.span is not None:
+                r.span.end(outcome="cancelled")
+        batch = claimed
         if not batch:
             return None
         total = sum(r.n for r in batch)
-        with self._stats_lock:
+        with self._seed_lock:
             seed = BATCH_SEED_BASE + self._batch_seed
             self._batch_seed += 1
-        t0 = time.monotonic()
+        # the device span opens *before* placement: acquire() may promote a
+        # cold model, and that cost belongs to device time (as it did when
+        # this was a hand-stamped t0)
+        dspan = self.tracer.start(
+            "serve.device", model=batch[0].model, sampler=batch[0].sampler,
+            rows=total, requests=len(batch))
+        for r in batch:
+            if r.span is not None:
+                r.span.end()   # queue wait: submit -> claim
         try:
             handle = self.registry.acquire(batch[0].model)
             sample = handle.generate_async(total, batch[0].sampler, seed=seed)
         except BaseException as exc:  # noqa: BLE001 — delivered via futures
+            dspan.end(outcome="error")
             for r in batch:
                 r.future.set_exception(exc)
             return None
-        with self._stats_lock:
-            self._inflight += 1
-            self.stats["max_inflight_observed"] = max(
-                self.stats["max_inflight_observed"], self._inflight)
-        return _Inflight(handle, sample, batch, total, t0)
+        v = self._m_inflight.inc(1)
+        self._m_inflight_max.set_max(v)
+        return _Inflight(handle, sample, batch, total, dspan)
 
     def _resolve(self, inflight: _Inflight) -> None:
         """Block on the device values, deliver per-request slices, account
-        queue-wait vs device-time."""
+        queue-wait vs device-time from the batch's spans."""
         batch = inflight.batch
         try:
             X, y = inflight.sample.result()
         except BaseException as exc:  # noqa: BLE001 — delivered via futures
+            inflight.span.end(outcome="error")
             for r in batch:
                 r.future.set_exception(exc)
-            with self._stats_lock:
-                self._inflight -= 1
+            self._m_inflight.dec(1)
             return
-        now = time.monotonic()
-        dt = now - inflight.t_dispatch
+        dt = inflight.span.end()
         off = 0
         for r in batch:
             r.future.set_result((X[off:off + r.n], y[off:off + r.n]))
             off += r.n
-        with self._stats_lock:
-            self._inflight -= 1
-            waited = sum(inflight.t_dispatch - r.enqueued_s for r in batch)
-            self.stats["requests"] += len(batch)
-            self.stats["rows"] += inflight.total_rows
-            self.stats["gen_s"] += dt
-            self.stats["device_s"] += dt
-            self.stats["queue_wait_s"] += waited
-            self.stats["batches"] += 1
-            self.stats["coalesced_requests"] += len(batch) - 1
-            slot = _sampler_slot(self.stats, batch[0].sampler)
-            slot["requests"] += len(batch)
-            slot["rows"] += inflight.total_rows
-            slot["batches"] += 1
-            slot["device_s"] += dt
-            slot["queue_wait_s"] += waited
+        sampler = batch[0].sampler
+        with self.metrics.lock:
+            self._m_inflight.dec(1)
+            self._h_device.observe(dt, sampler=sampler)
+            self._m_coalesced.inc(len(batch) - 1)
             for r in batch:
-                ten = _tenant_slot(self.stats, r.tenant)
-                ten["requests"] += 1
-                ten["rows"] += r.n
-                ten["queue_wait_s"] += inflight.t_dispatch - r.enqueued_s
+                self._m_requests.inc(1, sampler=sampler, tenant=r.tenant)
+                self._m_rows.inc(r.n, sampler=sampler, tenant=r.tenant)
+                wait = (r.span.duration_s if r.span is not None
+                        else inflight.span.t_start - r.enqueued_s)
+                self._h_queue_wait.observe(wait, sampler=sampler,
+                                           tenant=r.tenant)
 
     def serve_batch_sync(self, batch: List[Request]) -> None:
         """Dispatch + resolve one pre-formed batch on the calling thread —

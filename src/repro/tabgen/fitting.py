@@ -75,6 +75,7 @@ from repro.core import interpolants as itp
 from repro.data.store import DatasetStore
 from repro.forest.binning import edges_with_sentinel, pack_codes, transform
 from repro.forest.boosting import fit_ensemble
+from repro.obs import default_registry, default_tracer
 from repro.tabgen.artifacts import (RESULT_FIELDS, ForestArtifacts,
                                     rescale)
 from repro.train import checkpoint as _ckpt
@@ -218,7 +219,9 @@ def _run_grid_batches(run_batch, grid, bs: int, *,
         if key_id in done:
             res_np = _ckpt.read_batch_npz(checkpoint_dir, b0)
         else:
-            res_np = run_batch(chunk)
+            with default_tracer().span("fit.batch", batch=b0,
+                                       ensembles=len(chunk)):
+                res_np = run_batch(chunk)
             if manifest:   # Issue 3: stream to disk, checkpointed
                 _ckpt.write_batch_npz(checkpoint_dir, b0, res_np)
                 manifest.mark_done(key_id)
@@ -295,6 +298,23 @@ def _run_grid_batches_pipelined(dispatch, collect, grid, bs: int, *,
              "n_batches": len(batches), "n_cached": 0,
              "prefetch_depth": depth,
              "async_checkpoint": pcfg.async_checkpoint}
+    # stage timing comes from fit.prefetch / fit.dispatch / fit.write spans
+    # (busy_s below are their summed durations); the histograms export the
+    # same numbers through the process-wide registry for --metrics-dump
+    tracer = default_tracer()
+    _m = default_registry()
+    h_prefetch = _m.histogram(
+        "fit_prefetch_seconds", "Per-batch host input-build time "
+        "(fit.prefetch span durations)")
+    h_dispatch = _m.histogram(
+        "fit_dispatch_seconds", "Per-batch async dispatch-enqueue time "
+        "(fit.dispatch span durations; device time overlaps the pipeline)")
+    h_write = _m.histogram(
+        "fit_write_seconds", "Per-batch gather + checkpoint-commit time "
+        "(fit.write span durations)")
+    c_batches = _m.counter(
+        "fit_batches", "Ensemble-grid batches by disposition",
+        ("status",))
 
     def _put(q, item):
         """Bounded put that aborts when another stage failed."""
@@ -324,9 +344,10 @@ def _run_grid_batches_pipelined(dispatch, collect, grid, bs: int, *,
                 if (b0, len(chunk)) in done:
                     item = (b0, chunk, None)     # cached: nothing to build
                 else:
-                    t0 = time.perf_counter()
-                    inputs = prefetch(chunk)
-                    stats["prefetch_busy_s"] += time.perf_counter() - t0
+                    with tracer.span("fit.prefetch", batch=b0) as sp:
+                        inputs = prefetch(chunk)
+                    stats["prefetch_busy_s"] += sp.duration_s
+                    h_prefetch.observe(sp.duration_s)
                     item = (b0, chunk, inputs)
                 if not _put(in_q, item):
                     return
@@ -336,13 +357,14 @@ def _run_grid_batches_pipelined(dispatch, collect, grid, bs: int, *,
 
     def _finish(b0, chunk, res_dev):
         """Writer-stage work: deferred sync + gather + durable commit."""
-        t0 = time.perf_counter()
-        res_np = collect(res_dev, len(chunk))
-        if manifest:
-            _ckpt.write_batch_npz(checkpoint_dir, b0, res_np)
-            manifest.mark_done((b0, len(chunk)))
-        batch_np[b0] = res_np
-        stats["writer_busy_s"] += time.perf_counter() - t0
+        with tracer.span("fit.write", batch=b0) as sp:
+            res_np = collect(res_dev, len(chunk))
+            if manifest:
+                _ckpt.write_batch_npz(checkpoint_dir, b0, res_np)
+                manifest.mark_done((b0, len(chunk)))
+            batch_np[b0] = res_np
+        stats["writer_busy_s"] += sp.duration_s
+        h_write.observe(sp.duration_s)
 
     def _writer():
         try:
@@ -372,8 +394,12 @@ def _run_grid_batches_pipelined(dispatch, collect, grid, bs: int, *,
             if inputs is None:    # committed by a previous (or this) run
                 batch_np[b0] = _ckpt.read_batch_npz(checkpoint_dir, b0)
                 stats["n_cached"] += 1
+                c_batches.inc(1, status="cached")
                 continue
-            res_dev = dispatch(inputs)   # async: returns device futures
+            with tracer.span("fit.dispatch", batch=b0) as sp:
+                res_dev = dispatch(inputs)   # async: returns device futures
+            h_dispatch.observe(sp.duration_s)
+            c_batches.inc(1, status="dispatched")
             if pcfg.async_checkpoint:
                 if not _put(out_q, (b0, chunk, res_dev)):
                     break

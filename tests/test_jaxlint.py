@@ -204,6 +204,18 @@ def test_jx002_function_scope_read_is_clean():
     """) == []
 
 
+def test_jx002_class_method_read_is_clean():
+    # a per-call env read inside a method runs at call time, not import
+    # time (the Tracer._jax_annotation shape) — PR-8 false-positive fix
+    assert rules_hit("""
+        import os
+
+        class Tracer:
+            def annotation(self):
+                return os.environ.get("REPRO_OBS_JAX_TRACE", "")
+    """) == []
+
+
 def test_jx002_env_write_is_clean():
     # configuring the process at import (e.g. conftest forcing a platform)
     # is not a snapshot
@@ -338,6 +350,48 @@ def test_th001_container_mutator_counts_as_write():
             def load(self, entries):
                 self._done = set(entries)
     """) == ["TH001"]
+
+
+def test_th001_locked_read_is_guard_evidence():
+    # the PR-8 admission bug: per-tenant dict mutated via an unlocked
+    # setdefault helper, while the only *locked* access is the snapshot
+    # read — no locked write anywhere, so the pre-PR-8 rule stayed silent
+    fs = findings("""
+        import threading
+
+        class Admission:
+            def __init__(self):
+                self._cond = threading.Condition()
+                self._tenants = {}
+
+            def _tenant_stats(self, tenant):
+                return self._tenants.setdefault(tenant, {"admitted": 0})
+
+            def stats_snapshot(self):
+                with self._cond:
+                    return {t: dict(v) for t, v in self._tenants.items()}
+    """)
+    assert [f.rule for f in fs] == ["TH001"]
+    assert "_tenant_stats" in fs[0].message
+
+
+def test_th001_locked_read_respects_locked_suffix():
+    # same shape, but the mutating helper declares its contract: clean
+    assert rules_hit("""
+        import threading
+
+        class Admission:
+            def __init__(self):
+                self._cond = threading.Condition()
+                self._tenants = {}
+
+            def _tenant_stats_locked(self, tenant):
+                return self._tenants.setdefault(tenant, {"admitted": 0})
+
+            def stats_snapshot(self):
+                with self._cond:
+                    return {t: dict(v) for t, v in self._tenants.items()}
+    """) == []
 
 
 def test_th001_unguarded_attrs_are_clean():

@@ -1,0 +1,383 @@
+"""Tests for repro.obs: metrics registry, Prometheus exporter, tracer —
+and the PR-8 contract that /statz and /metrics are views over the same
+instruments and can never disagree."""
+import json
+import re
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.config import ForestConfig
+from repro.data.tabular import two_moons
+from repro.obs import (CONTENT_TYPE, MetricsRegistry, Tracer,
+                       render_prometheus)
+from repro.obs.metrics import DEFAULT_BUCKETS
+from repro.serving import AdmissionController, ModelRegistry
+from repro.tabgen import fit_artifacts
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry: instruments, schema, thread safety
+# ---------------------------------------------------------------------------
+
+def test_counter_basics_and_label_sum():
+    reg = MetricsRegistry()
+    c = reg.counter("requests", "Requests", ("tenant", "outcome"))
+    c.inc(3, tenant="a", outcome="ok")
+    c.inc(2, tenant="b", outcome="ok")
+    c.inc(1, tenant="b", outcome="err")
+    assert c.get(tenant="a", outcome="ok") == 3
+    assert c.get(tenant="z", outcome="ok") == 0      # untouched series
+    assert c.sum() == 6
+    assert c.sum(tenant="b") == 3
+    assert c.sum(outcome="ok") == 5
+    with pytest.raises(ValueError):
+        c.inc(-1, tenant="a", outcome="ok")          # monotonic
+    with pytest.raises(ValueError):
+        c.inc(1, tenant="a")                         # missing label
+
+
+def test_counter_reset_drops_matching_series():
+    reg = MetricsRegistry()
+    c = reg.counter("events", labelnames=("model", "event"))
+    c.inc(5, model="m1", event="acquires")
+    c.inc(7, model="m2", event="acquires")
+    c.reset(model="m1")
+    assert c.get(model="m1", event="acquires") == 0
+    assert c.get(model="m2", event="acquires") == 7
+
+
+def test_gauge_set_inc_dec_and_ratchet():
+    reg = MetricsRegistry()
+    g = reg.gauge("inflight")
+    g.set(2)
+    g.inc()
+    g.dec(3)
+    assert g.get() == 0
+    hi = reg.gauge("inflight_max")
+    hi.set_max(3)
+    hi.set_max(1)                                    # ratchet: no decrease
+    assert hi.get() == 3
+
+
+def test_registry_get_or_create_and_schema_mismatch():
+    reg = MetricsRegistry()
+    a = reg.counter("rows", "Rows", ("tenant",))
+    assert reg.counter("rows", "Rows", ("tenant",)) is a
+    with pytest.raises(ValueError):
+        reg.gauge("rows")                            # type mismatch
+    with pytest.raises(ValueError):
+        reg.counter("rows", labelnames=("sampler",))  # label mismatch
+    with pytest.raises(ValueError):
+        reg.counter("bad name")                      # invalid name
+
+
+def test_histogram_bucket_edges_are_le_inclusive():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    h.observe(0.1)     # exactly at a bound: le="0.1" (inclusive)
+    h.observe(0.5)     # -> le="1.0"
+    h.observe(2.0)     # above the last finite bound -> only +Inf
+    s = h.get()
+    assert s["buckets"] == [1, 1]
+    assert s["count"] == 3
+    assert s["sum"] == pytest.approx(2.6)
+    with pytest.raises(ValueError):
+        reg.histogram("lat2", buckets=(1.0, 0.1))    # unsorted
+    with pytest.raises(ValueError):
+        reg.histogram("lat3", buckets=(0.1, float("inf")))  # +Inf implicit
+
+
+def test_registry_thread_safety_exact_counts():
+    reg = MetricsRegistry()
+    c = reg.counter("hits", labelnames=("worker",))
+    h = reg.histogram("work", buckets=(0.5,))
+    n_threads, n_iter = 8, 500
+
+    def worker(i):
+        for _ in range(n_iter):
+            c.inc(1, worker=str(i % 2))
+            h.observe(0.25)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.sum() == n_threads * n_iter
+    assert h.count() == n_threads * n_iter
+    assert h.get()["buckets"] == [n_threads * n_iter]
+
+
+def test_snapshot_is_one_consistent_cut():
+    reg = MetricsRegistry()
+    c = reg.counter("paired_a")
+    d = reg.counter("paired_b")
+    stop = threading.Event()
+
+    def mutate():
+        while not stop.is_set():
+            with reg.lock:       # writers keep a+b in lockstep
+                c.inc()
+                d.inc()
+
+    t = threading.Thread(target=mutate)
+    t.start()
+    try:
+        for _ in range(200):
+            snap = reg.snapshot()
+            assert snap["paired_a"]["values"].get((), 0.0) == \
+                snap["paired_b"]["values"].get((), 0.0)
+    finally:
+        stop.set()
+        t.join()
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?P<labels>\{[^}]*\})? (?P<value>\S+)$')
+
+
+def _parse_prom(text):
+    """{(name, frozenset(label pairs)): float} over all sample lines."""
+    out = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        assert m, f"unparseable exposition line: {line!r}"
+        labels = frozenset(
+            re.findall(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"',
+                       m.group("labels") or ""))
+        out[(m.group("name"), labels)] = float(m.group("value"))
+    return out
+
+
+def test_render_counter_total_suffix_and_integer_format():
+    reg = MetricsRegistry()
+    reg.counter("rows", "Rows served", ("tenant",)).inc(7, tenant="a")
+    text = render_prometheus(reg)
+    assert "# HELP rows_total Rows served" in text
+    assert "# TYPE rows_total counter" in text
+    assert 'rows_total{tenant="a"} 7\n' in text      # bare int, no 7.0
+
+
+def test_render_histogram_cumulative_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "Latency", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 2.0):
+        h.observe(v)
+    parsed = _parse_prom(render_prometheus(reg))
+    assert parsed[("lat_bucket", frozenset({("le", "0.1")}))] == 1
+    assert parsed[("lat_bucket", frozenset({("le", "1")}))] == 2  # cumulative
+    assert parsed[("lat_bucket", frozenset({("le", "+Inf")}))] == 3
+    assert parsed[("lat_count", frozenset())] == 3
+    assert parsed[("lat_sum", frozenset())] == pytest.approx(2.55)
+
+
+def test_render_escapes_label_values_and_help():
+    reg = MetricsRegistry()
+    reg.counter("c", 'help with \\ and\nnewline', ("k",)).inc(
+        1, k='quo"te\\back\nline')
+    text = render_prometheus(reg)
+    assert r'# HELP c_total help with \\ and\nnewline' in text
+    assert r'c_total{k="quo\"te\\back\nline"} 1' in text
+    assert "\nnewline" not in text.replace(r"\nnewline", "")
+
+
+def test_render_unions_registries_and_rejects_collisions():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("serving_rows").inc(1)
+    b.counter("admission_rows").inc(2)
+    parsed = _parse_prom(render_prometheus(a, b, a))   # dup registry: ok
+    assert parsed[("serving_rows_total", frozenset())] == 1
+    assert parsed[("admission_rows_total", frozenset())] == 2
+    c = MetricsRegistry()
+    c.counter("serving_rows").inc(9)
+    with pytest.raises(ValueError):
+        render_prometheus(a, c)       # same family from distinct registries
+
+
+def test_every_exposed_name_is_prometheus_valid():
+    """All instruments the repo registers expose legal family names."""
+    reg = MetricsRegistry()
+    AdmissionController(metrics=reg)
+    text = render_prometheus(reg)
+    for line in text.splitlines():
+        if line.startswith("# TYPE "):
+            name = line.split()[2]
+            assert re.match(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$", name)
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_links_parent_and_times_body():
+    tr = Tracer()
+    with tr.span("outer", batch=1) as outer:
+        with tr.span("inner") as inner:
+            pass
+    assert inner.parent_id == outer.span_id
+    assert outer.parent_id is None
+    done = tr.spans()
+    assert [s.name for s in done] == ["inner", "outer"]  # inner ends first
+    assert outer.duration_s >= inner.duration_s >= 0.0
+    assert tr.durations("inner") == [inner.duration_s]
+    assert tr.spans(prefix="out")[0] is outer
+
+
+def test_span_ring_evicts_oldest():
+    tr = Tracer(capacity=3)
+    for i in range(5):
+        with tr.span("s", i=i):
+            pass
+    kept = tr.spans(name="s")
+    assert len(kept) == 3
+    assert [s.attrs["i"] for s in kept] == [2, 3, 4]
+
+
+def test_cross_thread_span_and_end_attrs():
+    tr = Tracer()
+    sp = tr.start("serve.device", rows=64)
+    out = {}
+
+    def resolver():
+        out["dt"] = sp.end(outcome="ok")
+
+    t = threading.Thread(target=resolver)
+    t.start()
+    t.join()
+    assert sp.attrs["outcome"] == "ok"
+    assert out["dt"] == pytest.approx(sp.duration_s)
+    assert sp.end() == out["dt"]          # idempotent: same duration back
+    assert len(tr.spans(name="serve.device")) == 1   # recorded once
+
+
+def test_span_jsonl_export(tmp_path):
+    tr = Tracer()
+    with tr.span("a", k="v"):
+        pass
+    path = tmp_path / "spans.jsonl"
+    assert tr.export_jsonl(str(path)) == 1
+    rec = json.loads(path.read_text().splitlines()[0])
+    assert rec["name"] == "a" and rec["attrs"] == {"k": "v"}
+    assert rec["duration_s"] >= 0.0 and rec["parent_id"] is None
+
+
+# ---------------------------------------------------------------------------
+# /metrics over HTTP, reconciled against /statz (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def obs_http_plane():
+    from repro.launch.serve_http import ServingApp, serve_in_thread
+    X, y = two_moons(300, seed=0)
+    fcfg = ForestConfig(method="flow", n_t=6, duplicate_k=8, n_trees=10,
+                        max_depth=3, n_bins=16, reg_lambda=1.0)
+    art = fit_artifacts(X, y, fcfg, seed=0)
+    metrics, tracer = MetricsRegistry(), Tracer()
+    registry = ModelRegistry(buckets=(64,), metrics=metrics)
+    registry.register("moons", art, samplers=("euler",))
+    app = ServingApp(registry,
+                     AdmissionController(metrics=metrics),
+                     metrics=metrics, tracer=tracer)
+    httpd, thread = serve_in_thread(app)
+    host, port = httpd.server_address[:2]
+    yield app, tracer, f"http://{host}:{port}"
+    httpd.shutdown()
+    httpd.server_close()
+    app.stop()
+    thread.join(timeout=10)
+
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=120) as resp:
+        return resp.status, dict(resp.headers), resp.read().decode()
+
+
+def test_http_metrics_reconciles_with_statz(obs_http_plane):
+    app, tracer, base = obs_http_plane
+    req = urllib.request.Request(
+        f"{base}/v1/generate", method="POST",
+        data=json.dumps({"model": "moons", "n": 40,
+                         "tenant": "t1"}).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=300) as resp:
+        body = json.load(resp)
+    assert np.asarray(body["rows"]).shape == (40, 2)
+
+    status, headers, text = _get(f"{base}/metrics")
+    assert status == 200
+    assert headers["Content-Type"] == CONTENT_TYPE
+    parsed = _parse_prom(text)
+
+    status, _, statz_text = _get(f"{base}/statz")
+    assert status == 200
+    statz = json.loads(statz_text)
+
+    sched = statz["scheduler"]
+    def fam(name):
+        return sum(v for (n, _), v in parsed.items() if n == name)
+    assert fam("serving_requests_total") == sched["requests"] == 1
+    assert fam("serving_rows_total") == sched["rows"] == 40
+    assert parsed[("serving_device_seconds_count",
+                   frozenset({("sampler", "euler")}))] == sched["batches"]
+    assert fam("serving_device_seconds_sum") == \
+        pytest.approx(sched["device_s"])
+    assert fam("serving_queue_wait_seconds_sum") == \
+        pytest.approx(sched["queue_wait_s"])
+    adm = statz["admission"]["tenants"]
+    assert parsed[("admission_requests_total",
+                   frozenset({("tenant", "t1"),
+                              ("outcome", "admitted")}))] == \
+        adm["t1"]["admitted"]
+    assert parsed[("registry_models", frozenset())] == 1
+
+    # queue-wait and device-time come from spans, not hand-stamped deltas
+    qspans = tracer.spans(name="serve.queue")
+    dspans = tracer.spans(name="serve.device")
+    assert len(qspans) == 1 and len(dspans) == sched["batches"]
+    assert sum(s.duration_s for s in qspans) == \
+        pytest.approx(sched["queue_wait_s"])
+    assert sum(s.duration_s for s in dspans) == \
+        pytest.approx(sched["device_s"])
+    assert qspans[0].attrs["tenant"] == "t1"
+
+
+def test_http_metrics_404_free_and_statz_shape(obs_http_plane):
+    _, _, base = obs_http_plane
+    status, _, text = _get(f"{base}/statz")
+    body = json.loads(text)
+    assert {"scheduler", "admission", "registry"} <= set(body)
+    assert {"requests", "rows", "gen_s", "queue_wait_s", "device_s",
+            "batches", "per_sampler", "per_tenant"} <= set(body["scheduler"])
+
+
+# ---------------------------------------------------------------------------
+# offline dump CLI
+# ---------------------------------------------------------------------------
+
+def test_metrics_dump_cli_demo(capsys, tmp_path):
+    from repro.launch.metrics import main
+    main(["--demo"])
+    out = capsys.readouterr().out
+    parsed = _parse_prom(out)
+    assert parsed[("demo_requests_total", frozenset({("tenant", "a")}))] == 3
+    assert parsed[("demo_latency_seconds_bucket",
+                   frozenset({("le", "+Inf")}))] == 4
+    path = tmp_path / "m.prom"
+    main(["--demo", "--out", str(path)])
+    assert _parse_prom(path.read_text().strip() + "\n")
+
+
+def test_default_buckets_are_sane():
+    assert list(DEFAULT_BUCKETS) == sorted(set(DEFAULT_BUCKETS))
+    assert DEFAULT_BUCKETS[0] <= 0.001 and DEFAULT_BUCKETS[-1] >= 10
