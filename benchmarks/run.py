@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
                       (peak RSS + ABBA min-of-reps throughput vs dataset size)
   serving           - open-loop mixed-tenant load: in-flight scheduler vs
                       drain-then-serve reference + latency percentiles
+  refresh           - freshness loop: warm-start extension vs full refit
   ablation          - Fig. 3 / 10 / 11: early stopping + K/n_tree sweeps
   roofline          - dry-run roofline table (scale deliverable)
 
@@ -37,8 +38,9 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bench_ablations, bench_calo, bench_generation,
-                            bench_quality, bench_resource_scaling,
-                            bench_roofline, bench_serving, bench_training)
+                            bench_quality, bench_refresh,
+                            bench_resource_scaling, bench_roofline,
+                            bench_serving, bench_training)
     sections = {
         "resource_scaling": lambda: bench_resource_scaling.main(
             sizes=(200, 500, 1000) if quick else (1000, 3000, 10000)),
@@ -57,6 +59,9 @@ def main() -> None:
         "serving": lambda: bench_serving.main(
             quick=quick, json_path=os.path.join(args.json_dir,
                                                 "BENCH_serving.json")),
+        "refresh": lambda: bench_refresh.main(
+            quick=quick, json_path=os.path.join(args.json_dir,
+                                                "BENCH_refresh.json")),
         "ablation": lambda: bench_ablations.main(quick=quick),
         "roofline": lambda: bench_roofline.main(),
     }

@@ -85,6 +85,105 @@ assert proc.returncode == 0 and "bye" in rest, proc.returncode
 print("serving HTTP smoke ok")
 EOF
 
+echo "== freshness-loop smoke (append -> warm extend -> live hot-swap) =="
+# the full refresh path over real HTTP: ingest a store, train + serve a
+# base model, then run repro.launch.refresh (append fresh rows, warm-start
+# extend, admin reload) while generates are in flight — zero dropped
+refresh_dir="$(mktemp -d)"
+python -m repro.launch.ingest --out "$refresh_dir/store" \
+  --synthetic 1024x4x2 --shard-rows 512 --batch-rows 512
+python -m repro.launch.train_forest --data-dir "$refresh_dir/store" \
+  --mesh none --n-t 2 --n-trees 4 --max-depth 3 --n-bins 16 \
+  --duplicate-k 2 --out "$refresh_dir/base"
+REFRESH_DIR="$refresh_dir" python - <<'EOF'
+import json, os, signal, subprocess, sys, threading, time, urllib.request
+d = os.environ["REFRESH_DIR"]
+env = dict(os.environ, PYTHONUNBUFFERED="1")
+proc = subprocess.Popen(
+    [sys.executable, "-m", "repro.launch.serve_http",
+     "--model", "fresh=" + os.path.join(d, "base"),
+     "--port", "0", "--buckets", "64", "--no-warm"],
+    stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+base = None
+for line in proc.stdout:
+    sys.stdout.write(line)
+    if line.startswith("serving on "):
+        base = line.split()[-1].strip()
+        break
+assert base, "serve_http never came up"
+
+def post(path, body):
+    req = urllib.request.Request(
+        base + path, method="POST", data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=300) as r:
+        return json.load(r)
+
+results, stop = [], threading.Event()
+def hammer():  # keep generates in flight across the swap
+    while not stop.is_set():
+        results.append(len(post("/v1/generate",
+                                {"model": "fresh", "n": 8})["rows"]))
+        time.sleep(0.05)
+threads = [threading.Thread(target=hammer) for _ in range(2)]
+for t in threads:
+    t.start()
+ref = subprocess.run(
+    [sys.executable, "-m", "repro.launch.refresh",
+     "--store", os.path.join(d, "store"),
+     "--synthetic", "512x4x2", "--seed", "1", "--batch-rows", "256",
+     "--artifacts", os.path.join(d, "base"),
+     "--out", os.path.join(d, "ext"), "--extra-trees", "2",
+     "--server", base, "--model", "fresh"], env=env)
+stop.set()
+for t in threads:
+    t.join(timeout=120)
+assert ref.returncode == 0, "refresh CLI failed"
+assert results and all(n == 8 for n in results), (len(results), results[:5])
+with urllib.request.urlopen(base + "/v1/models", timeout=60) as r:
+    m = json.load(r)["models"]["fresh"]
+assert m["version"] == 2, m
+lin = m["lineage"]
+assert lin["base"]["round_range"] == [4, 6], lin
+assert lin["store"]["version"] == 2 and lin["rows"] == 1536, lin
+proc.send_signal(signal.SIGINT)
+proc.wait(timeout=60)
+sys.stdout.write(proc.stdout.read())
+print(f"freshness loop smoke ok: {len(results)} in-flight generates, "
+      "0 dropped, model v2 with lineage")
+EOF
+
+echo "== same-shape hot-swap recompile budget (in-process) =="
+# a reload that keeps every array shape must reuse every compiled program:
+# recompile_budget(0) fails the build on any compile during swap + generate
+REFRESH_DIR="$refresh_dir" python - <<'EOF'
+import dataclasses, os
+import numpy as np
+from repro.analysis.runtime import recompile_budget
+from repro.launch.serve_http import ServingApp
+from repro.serving import AdmissionController, ModelRegistry
+from repro.tabgen import TabularGenerator
+d = os.environ["REFRESH_DIR"]
+gen = TabularGenerator.load(os.path.join(d, "base"))
+shifted = dataclasses.replace(
+    gen.artifacts, mins=np.asarray(gen.artifacts.mins) + 1.0,
+    maxs=np.asarray(gen.artifacts.maxs) + 1.0)
+p2 = os.path.join(d, "base_shifted")
+shifted.save(p2)
+registry = ModelRegistry(buckets=(64,))
+registry.register("m", gen.artifacts)
+registry.warmup()
+app = ServingApp(registry, AdmissionController(), model_paths={"m": p2})
+app.scheduler.submit(8, model="m").result(timeout=300)
+with recompile_budget(0):
+    status, body = app.reload_model("m", {})
+    assert status == 200 and body["version"] == 2, (status, body)
+    X, _ = app.scheduler.submit(8, model="m").result(timeout=300)
+app.stop()
+assert X.shape == (8, 4), X.shape
+print("same-shape hot-swap: zero recompiles ok")
+EOF
+
 echo "== generation benchmark (emits BENCH_generation.json) =="
 # write to a scratch dir: the committed trajectory artifacts stay untouched
 # and a stale copy can't mask a benchmark failure
@@ -107,6 +206,11 @@ echo "== serving benchmark (emits BENCH_serving.json) =="
 # open-loop mixed-tenant load: in-flight scheduler vs drain-then-serve
 python benchmarks/run.py --only serving --json-dir "$bench_out"
 test -s "$bench_out/BENCH_serving.json" && echo "BENCH_serving.json written"
+
+echo "== refresh benchmark (emits BENCH_refresh.json) =="
+# warm-start extension vs full refit (bit-identity asserted in the bench)
+python benchmarks/run.py --only refresh --json-dir "$bench_out"
+test -s "$bench_out/BENCH_refresh.json" && echo "BENCH_refresh.json written"
 
 echo "== benchmark regression gate (vs committed trajectory) =="
 # >25% rows/sec drop vs the committed BENCH_*.json fails the build; tune

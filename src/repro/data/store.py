@@ -25,6 +25,13 @@ resume=True)`` replays the (deterministic) iterator, skips exactly the
 committed rows — finished shard files are never re-read or re-written —
 and refuses a manifest whose fingerprint does not match the new call.
 
+Freshness: a sealed store is appendable. :meth:`DatasetStore.append` adds
+shards from a new batch iterator under the same commit discipline, merges
+the new rows into the class stats and quantile sketch
+(:meth:`QuantileSketch.merge`), and bumps a monotonic manifest ``version``
+on completion — the data half of the incremental refresh loop (append →
+``extend_artifacts`` warm-start fit → live swap).
+
 Memory model: ingest holds O(batch + shard) rows; a :class:`DatasetStore`
 reader holds O(1) metadata plus whatever rows a caller asks for —
 ``store[rows]`` gathers only from the shards those rows live in, which is
@@ -41,7 +48,7 @@ import numpy as np
 
 from repro.data.sketch import QuantileSketch
 from repro.obs import default_registry, default_tracer
-from repro.train.checkpoint import _fsync_replace
+from repro.train.checkpoint import _fsync_replace, describe_fingerprint_mismatch
 
 FORMAT_VERSION = 1
 MANIFEST = "manifest.json"
@@ -191,6 +198,13 @@ class DatasetStore:
         return len(self._shard_rows)
 
     @property
+    def version(self) -> int:
+        """Monotonic store version: 1 after the initial ingest, +1 per
+        completed :meth:`append` — what model lineage records so a serving
+        host can tell which data vintage a model was fit on."""
+        return int(self.manifest.get("version", 1))
+
+    @property
     def nbytes(self) -> int:
         """On-disk feature bytes (what in-memory residency would cost)."""
         return self.n_rows * self.p * 4
@@ -285,6 +299,174 @@ class DatasetStore:
         sketch — the out-of-core replacement for sorting full columns (see
         :func:`repro.forest.binning.fit_bins_streaming`)."""
         return self.sketch.edges(n_bins, mode=mode)
+
+    # -- incremental append -------------------------------------------------
+
+    def append(self, batches, *, source=None, resume: bool = False,
+               metrics=None, tracer=None) -> "DatasetStore":
+        """Add shards from a new batch iterator to this sealed store.
+
+        The freshness-loop writer: new rows commit as additional shards
+        under the same fsync/tmp-rename discipline as :func:`ingest`, each
+        shard's rows folded into the running class stats and merged into
+        the dataset-level quantile sketch (a per-shard
+        :class:`~repro.data.sketch.QuantileSketch` absorbed via
+        :meth:`~repro.data.sketch.QuantileSketch.merge` — the same path a
+        parallel ingest combines writers with). The store stays a valid,
+        readable, *complete* store throughout: concurrent readers opened
+        before or during an append see a consistent committed prefix.
+
+        Versioning: a durable ``append`` marker (recording the base row
+        count and this call's ``source``) lands in the manifest before the
+        first new row is consumed; the final commit drops the marker and
+        bumps the manifest ``version`` (1 after ingest, +1 per completed
+        append). A crash mid-append leaves the marker plus a prefix of
+        committed shards — ``append(batches, resume=True)`` replays the
+        deterministic iterator, skips exactly the committed new rows, and
+        finishes the version bump. Resuming when no append is in flight is
+        a no-op returning a fresh reader (the retry-after-success case).
+
+        Returns a **new** :class:`DatasetStore` reader over the grown
+        store; ``self`` keeps serving the pre-append row count.
+        """
+        _m = metrics or default_registry()
+        _t = tracer or default_tracer()
+        c_rows = _m.counter("ingest_rows", "Rows committed to dataset stores")
+        c_shards = _m.counter("ingest_shards",
+                              "Shards durably committed (manifest advanced)")
+        c_batches = _m.counter("ingest_batches",
+                               "Source batches consumed (after resume skip)")
+        h_commit = _m.histogram(
+            "ingest_shard_commit_seconds",
+            "Per-shard commit time: shard files + stats + manifest "
+            "(ingest.shard span durations)")
+
+        directory = self.directory
+        man = _read_manifest(directory)
+        marker = man.get("append")
+        if marker is not None and not resume:
+            raise ValueError(
+                f"store at {directory} has an unfinished append "
+                f"({man['n_rows'] - marker['base_rows']} of its rows "
+                "committed); finish it with append(batches, resume=True) "
+                "or re-ingest into a fresh directory")
+        if marker is None and resume:
+            return DatasetStore(directory)   # append already completed
+        if marker is not None and marker.get("source") != source:
+            raise ValueError(
+                f"append at {directory} was started with source="
+                f"{marker.get('source')!r} but this resume passes "
+                f"{source!r}; resuming would mix two streams")
+
+        fingerprint = man["fingerprint"]
+        p = int(fingerprint["p"])
+        has_labels = fingerprint.get("label_dtype") is not None
+        shard_rows = int(fingerprint["shard_rows"])
+        sketch_entries = int(fingerprint["sketch_entries"])
+        if marker is None:
+            marker = {"source": source, "base_rows": int(man["n_rows"]),
+                      "base_version": int(man.get("version", 1))}
+
+        stats_path = os.path.join(directory, man["stats"])
+        with np.load(stats_path) as data:
+            state = {k: data[k] for k in data.files}
+        sketch = QuantileSketch.from_state(state)
+        cstats = _ClassStats.from_state(state, p)
+        shards = list(man["shards"])
+        skip = int(man["n_rows"]) - int(marker["base_rows"])
+
+        def _commit_inner(xs, ys, final):
+            i = len(shards)
+            if len(xs):
+                _write_npy_atomic(directory, f"{_shard_base(i)}.x.npy", xs)
+                if ys is not None:
+                    _write_npy_atomic(directory, f"{_shard_base(i)}.y.npy",
+                                      ys)
+                batch_sk = QuantileSketch(p, sketch_entries)
+                batch_sk.update(xs)
+                sketch.merge(batch_sk)
+                cstats.update(xs, ys if ys is not None
+                              else np.zeros(len(xs), np.int64))
+                shards.append({"rows": int(len(xs))})
+            stats_name = _stats_name(len(shards))
+            _write_npz_atomic(directory, stats_name,
+                              dict(sketch.state_dict(),
+                                   **cstats.state_dict()))
+            payload = {
+                "format_version": FORMAT_VERSION,
+                "fingerprint": fingerprint,
+                "complete": True,
+                "version": (marker["base_version"] + 1 if final
+                            else marker["base_version"]),
+                "n_rows": int(sum(s["rows"] for s in shards)),
+                "n_classes": int(len(cstats.classes)),
+                "class_histogram": {str(c): int(n) for c, n in
+                                    zip(cstats.classes, cstats.counts)},
+                "shards": shards,
+                "stats": stats_name,
+            }
+            if not final:
+                payload["append"] = marker
+            _write_manifest(directory, payload)
+            if len(xs):   # drop the superseded stats snapshot (best-effort)
+                prev = os.path.join(directory, _stats_name(len(shards) - 1))
+                if os.path.exists(prev) and prev != stats_path:
+                    os.unlink(prev)
+
+        def _commit(xs, ys, final):
+            with _t.span("ingest.shard", shard=len(shards),
+                         rows=int(len(xs)), complete=final) as sp:
+                _commit_inner(xs, ys, final)
+            h_commit.observe(sp.duration_s)
+            if len(xs):
+                c_rows.inc(int(len(xs)))
+                c_shards.inc(1)
+
+        with _t.span("store.append", base_rows=marker["base_rows"],
+                     base_version=marker["base_version"], resume=resume):
+            if not resume:
+                # durable in-flight marker *before* any new row lands: every
+                # crash state is either resumable or trivially retryable
+                _write_manifest(directory, dict(man, append=marker))
+            buf_x, buf_y, buffered = [], [], 0
+            for b in batches:
+                xb, yb = _norm_batch(b, p, has_labels)
+                if skip:
+                    take = min(skip, len(xb))
+                    skip -= take
+                    xb = xb[take:]
+                    yb = None if yb is None else yb[take:]
+                    if not len(xb):
+                        continue
+                c_batches.inc(1)
+                buf_x.append(xb)
+                if yb is not None:
+                    buf_y.append(yb)
+                buffered += len(xb)
+                while buffered >= shard_rows:
+                    xs = np.concatenate(buf_x) if len(buf_x) > 1 else buf_x[0]
+                    ys = ((np.concatenate(buf_y) if len(buf_y) > 1
+                           else buf_y[0]) if has_labels else None)
+                    _commit(xs[:shard_rows],
+                            None if ys is None else ys[:shard_rows],
+                            final=False)
+                    buf_x = [xs[shard_rows:]] if len(xs) > shard_rows else []
+                    buf_y = (([ys[shard_rows:]] if len(ys) > shard_rows
+                              else []) if has_labels else [])
+                    buffered -= shard_rows
+            if skip:
+                raise ValueError(
+                    f"append resume expected at least {skip} more rows from "
+                    "the iterator than it produced — the stream is not the "
+                    "one this append started with")
+            xs = (np.concatenate(buf_x) if len(buf_x) > 1
+                  else (buf_x[0] if buf_x else np.empty((0, p), np.float32)))
+            ys = None
+            if has_labels:
+                ys = (np.concatenate(buf_y) if len(buf_y) > 1
+                      else (buf_y[0] if buf_y else np.empty((0,), np.int64)))
+            _commit(xs, ys, final=True)
+        return DatasetStore(directory)
 
 
 # ---------------------------------------------------------------------------
@@ -383,12 +565,13 @@ def ingest(batches, directory: str, *, shard_rows: int = 65536,
     if existing is not None:
         stale = existing.get("fingerprint")
         if stale != fingerprint:
-            diff = sorted(k for k in fingerprint
-                          if (stale or {}).get(k) != fingerprint[k])
             raise ValueError(
-                f"ingest at {directory} was started under a different "
-                f"configuration (mismatched: {diff}); resuming would mix "
-                "two streams. Use a fresh directory to re-ingest.")
+                f"ingest at {directory} was started under a mismatched "
+                "configuration; resuming would mix two streams. Use a "
+                "fresh directory to re-ingest.\n"
+                + describe_fingerprint_mismatch(stale, fingerprint,
+                                                stale_name="store",
+                                                new_name="requested"))
         if existing.get("complete"):
             return DatasetStore(directory)
         shards = list(existing["shards"])

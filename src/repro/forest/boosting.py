@@ -5,6 +5,20 @@
 loss stalls for ``early_stop_rounds`` rounds — the compute saving the paper
 reports (up to 3x). Per-ensemble best-round masking makes the packed model
 identical to one trained with exact per-ensemble stopping.
+
+Warm starting (the incremental freshness loop): boosting is additive, so a
+model trained to round R extends to round R + K without recomputing the
+first R rounds. ``warm=`` seeds the round buffers from a previous
+:class:`BoostResult` and *replays* the saved trees on the raw (pre-binning)
+inputs to reconstruct the running train/val predictions — exact, because
+``repro.forest.binning.transform`` guarantees ``code > b  <=>
+x > edges[:, b]``, so raw-value traversal routes every row to the same leaf
+the in-loop code-space routing did. Rounds past ``best_round`` were masked
+to zero leaves by the early-stopping packer; the warm loop simply restarts
+at ``best_round + 1`` and re-grows them (deterministic, hence bit-identical
+to the original), which is at most ``early_stop_rounds - 1`` rounds of
+extra compute. The net contract, asserted in tests: a warm-started run to
+R + K equals a cold run to R + K bit for bit.
 """
 from __future__ import annotations
 
@@ -14,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ForestConfig
-from repro.forest.tree import Tree, grow_tree, predict_tree_codes
+from repro.forest.tree import (Tree, grow_tree, predict_tree_codes,
+                               predict_tree_values)
 
 
 class BoostResult(NamedTuple):
@@ -37,8 +52,18 @@ def _wmse(pred, tgt, w, axis_names: Sequence[str]):
 
 def fit_boosted(codes, tgt, w, edges_sentinel, val_codes, val_tgt, val_w,
                 fcfg: ForestConfig, axis_names: Sequence[str] = (),
-                scatter_shards: int = 0) -> BoostResult:
-    """codes/val_codes: [n, p] int; tgt/val_tgt: [n, out]; w: [n] weights."""
+                scatter_shards: int = 0, *, warm=None, x_raw=None,
+                val_raw=None) -> BoostResult:
+    """codes/val_codes: [n, p] int; tgt/val_tgt: [n, out]; w: [n] weights.
+
+    ``warm = (feat [R, H], thr_val [R, H], leaf [R, L, out], val_curve [R],
+    best_round [])`` continues a previous run (same data, edges, and config
+    up to ``n_trees``): the saved rounds seed the buffers, the running
+    predictions are rebuilt by replaying the trees on ``x_raw`` /
+    ``val_raw`` (the *raw* pre-binning inputs the codes were quantised
+    from), and the loop restarts at ``best_round + 1`` — re-growing any
+    early-stop-masked tail rounds identically before appending new ones.
+    """
     n, p = codes.shape
     out = tgt.shape[1]
     T, depth = fcfg.n_trees, fcfg.max_depth
@@ -80,11 +105,49 @@ def fit_boosted(codes, tgt, w, edges_sentinel, val_codes, val_tgt, val_w,
         return (r + 1, pred, vpred, best_loss, best_r,
                 (feat_b, thr_b, leaf_b), patience, vc)
 
-    state = (jnp.int32(0),
-             jnp.zeros((n, out), jnp.float32),
-             jnp.zeros((val_codes.shape[0], out), jnp.float32),
-             jnp.float32(jnp.inf), jnp.int32(0),
-             (feat_buf, thr_buf, leaf_buf), jnp.int32(0), vcurve)
+    if warm is None:
+        state = (jnp.int32(0),
+                 jnp.zeros((n, out), jnp.float32),
+                 jnp.zeros((val_codes.shape[0], out), jnp.float32),
+                 jnp.float32(jnp.inf), jnp.int32(0),
+                 (feat_buf, thr_buf, leaf_buf), jnp.int32(0), vcurve)
+    else:
+        if x_raw is None or val_raw is None:
+            raise ValueError("warm start needs x_raw/val_raw (the raw rows "
+                             "the codes were quantised from) to replay the "
+                             "saved trees")
+        wf, wt, wl, wvc, wbr = warm
+        R0 = wf.shape[0]
+        if R0 > T:
+            raise ValueError(f"warm state has {R0} rounds but "
+                             f"n_trees={T}; extension needs n_trees > the "
+                             "base model's round count")
+        feat_buf = feat_buf.at[:R0].set(wf.astype(jnp.int32))
+        thr_buf = thr_buf.at[:R0].set(wt.astype(jnp.float32))
+        leaf_buf = leaf_buf.at[:R0].set(wl.astype(jnp.float32))
+        vcurve = vcurve.at[:R0].set(wvc.astype(jnp.float32))
+        wbr = wbr.astype(jnp.int32)
+
+        def _replay(r, carry):
+            # same leaf array, same routing (transform's strict-less-count
+            # contract makes raw-value traversal == code-space routing),
+            # same sequential f32 accumulation order as the original loop
+            p_acc, vp_acc = carry
+            p_acc = p_acc + predict_tree_values(
+                x_raw, feat_buf[r], thr_buf[r], leaf_buf[r], depth)
+            vp_acc = vp_acc + predict_tree_values(
+                val_raw, feat_buf[r], thr_buf[r], leaf_buf[r], depth)
+            return p_acc, vp_acc
+
+        pred0, vpred0 = jax.lax.fori_loop(
+            0, wbr + 1, _replay,
+            (jnp.zeros((n, out), jnp.float32),
+             jnp.zeros((val_raw.shape[0], out), jnp.float32)))
+        # exact loop state at r = best_round + 1: the improving round set
+        # best_loss to its own val loss and zeroed patience; masked rounds
+        # past best_round re-grow deterministically from here
+        state = (wbr + 1, pred0, vpred0, wvc[wbr], wbr,
+                 (feat_buf, thr_buf, leaf_buf), jnp.int32(0), vcurve)
     state = jax.lax.while_loop(cond, body, state)
     rounds_run, _, _, _, best_r, bufs, _, vc = state
     feat_b, thr_b, leaf_b = bufs
@@ -98,22 +161,39 @@ def fit_boosted(codes, tgt, w, edges_sentinel, val_codes, val_tgt, val_w,
 
 def fit_ensemble(codes, tgt, w, edges_sentinel, val_codes, val_tgt, val_w,
                  fcfg: ForestConfig, axis_names: Sequence[str] = (),
-                 scatter_shards: int = 0):
+                 scatter_shards: int = 0, *, warm=None, x_raw=None,
+                 val_raw=None):
     """SO: vmap scalar-output boosting over the p outputs (shared codes);
     MO: one vector-leaf boosting run.
 
     Returns BoostResult with leading sub-ensemble dim:
       MO: feat [1, T, H],  leaf [1, T, L, out]
       SO: feat [out, T, H], leaf [out, T, L, 1]
+
+    ``warm`` carries the previous :class:`BoostResult` arrays *with* the
+    sub-ensemble leading dim (``feat [n_sub, R, H]``, ..., ``best_round
+    [n_sub]``); ``x_raw``/``val_raw`` are the shared raw inputs every
+    sub-ensemble replays its saved trees on (see :func:`fit_boosted`).
     """
     if fcfg.multi_output:
+        w1 = None if warm is None else tuple(a[0] for a in warm)
         res = fit_boosted(codes, tgt, w, edges_sentinel, val_codes, val_tgt,
-                          val_w, fcfg, axis_names, scatter_shards)
+                          val_w, fcfg, axis_names, scatter_shards,
+                          warm=w1, x_raw=x_raw, val_raw=val_raw)
         return jax.tree_util.tree_map(lambda a: a[None], res)
 
-    def one(t_col, v_col):
-        return fit_boosted(codes, t_col[:, None], w, edges_sentinel,
-                           val_codes, v_col[:, None], val_w, fcfg, axis_names,
-                           scatter_shards)
+    if warm is None:
+        def one(t_col, v_col):
+            return fit_boosted(codes, t_col[:, None], w, edges_sentinel,
+                               val_codes, v_col[:, None], val_w, fcfg,
+                               axis_names, scatter_shards)
 
-    return jax.vmap(one, in_axes=(1, 1))(tgt, val_tgt)
+        return jax.vmap(one, in_axes=(1, 1))(tgt, val_tgt)
+
+    def one_warm(t_col, v_col, wsub):
+        return fit_boosted(codes, t_col[:, None], w, edges_sentinel,
+                           val_codes, v_col[:, None], val_w, fcfg,
+                           axis_names, scatter_shards, warm=wsub,
+                           x_raw=x_raw, val_raw=val_raw)
+
+    return jax.vmap(one_warm, in_axes=(1, 1, 0))(tgt, val_tgt, warm)

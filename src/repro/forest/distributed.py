@@ -58,8 +58,16 @@ def _sketch_edges(xt, w, n_bins: int, data_axes: Sequence[str],
 
 
 def _fit_one_sharded(x0, w, class_id, t, y_e, key2, fcfg: ForestConfig,
-                     data_axes: Tuple[str, ...], scatter_shards: int = 0):
-    """Train one (t, y) ensemble on this device's row shard (+collectives)."""
+                     data_axes: Tuple[str, ...], scatter_shards: int = 0,
+                     warm=None):
+    """Train one (t, y) ensemble on this device's row shard (+collectives).
+
+    ``warm`` is this ensemble's base-model slice ``(feat [n_sub, R, H], ...,
+    best_round [n_sub])`` for a warm-start continuation: the saved trees are
+    replayed on this shard's raw noised rows (the running predictions are
+    row-sharded exactly like the training loop's, so the psum'd validation
+    loss continues bit-identically — see :mod:`repro.forest.boosting`).
+    """
     K = fcfg.duplicate_k
     x0d = jnp.repeat(x0, K, axis=0)
     wd = jnp.repeat(w * (class_id == y_e).astype(jnp.float32), K, axis=0)
@@ -81,12 +89,13 @@ def _fit_one_sharded(x0, w, class_id, t, y_e, key2, fcfg: ForestConfig,
         codes_v = pack_codes(codes_v, fcfg.n_bins)
     return fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
                         codes_v, tgtv, wd, fcfg, axis_names=data_axes,
-                        scatter_shards=scatter_shards)
+                        scatter_shards=scatter_shards, warm=warm,
+                        x_raw=xt, val_raw=xtv)
 
 
 def make_distributed_fit(mesh: Mesh, fcfg: ForestConfig,
                          data_axes: Sequence[str] = ("data",),
-                         model_axis: str = "model"):
+                         model_axis: str = "model", warm_rounds: int = 0):
     """Build the jitted shard_map trainer.
 
     Returned fn signature:
@@ -94,32 +103,50 @@ def make_distributed_fit(mesh: Mesh, fcfg: ForestConfig,
          keys [n_ens, 2] PRNG keys) -> BoostResult stacked over n_ens.
     n must divide by prod(data axes); n_ens by the model axis.
 
-    Cached on (mesh, config, axes): every ``fit_artifacts`` call with the
-    same trainer reuses one jitted callable, so repeated fits (resume,
-    benchmarks, serving-side retrains) pay XLA compilation once per process
-    instead of once per call.
+    With ``warm_rounds = R > 0`` (a warm-start extension from an R-round
+    base model) the fn takes five extra model-axis-sharded arrays — this
+    batch's base slices ``feat [n_ens, n_sub, R, H]``, ``thr_val``,
+    ``leaf``, ``val_curve [n_ens, n_sub, R]``, ``best_round [n_ens,
+    n_sub]`` — and every ensemble continues boosting from its slice.
+
+    Cached on (mesh, config, axes, warm rounds): every ``fit_artifacts``
+    call with the same trainer reuses one jitted callable, so repeated fits
+    (resume, benchmarks, serving-side retrains) pay XLA compilation once
+    per process instead of once per call.
     """
-    return _make_distributed_fit(mesh, fcfg, tuple(data_axes), model_axis)
+    return _make_distributed_fit(mesh, fcfg, tuple(data_axes), model_axis,
+                                 int(warm_rounds))
 
 
 @functools.lru_cache(maxsize=16)
 def _make_distributed_fit(mesh: Mesh, fcfg: ForestConfig,
-                          data_axes: Tuple[str, ...], model_axis: str):
+                          data_axes: Tuple[str, ...], model_axis: str,
+                          warm_rounds: int = 0):
 
     shards = (dict(zip(mesh.axis_names, mesh.devices.shape))[data_axes[-1]]
               if fcfg.split_reduce == "reduce_scatter" else 0)
 
-    def per_device(x0, w, cid, ts, ys, keys):
+    def per_device(x0, w, cid, ts, ys, keys, *warm):
         fit = functools.partial(_fit_one_sharded, x0, w, cid,
                                 fcfg=fcfg, data_axes=data_axes,
                                 scatter_shards=shards)
         # sequential map over local ensembles: one set of codes live at a
         # time (the Issue-1 memory discipline under sharding)
+        if warm:
+            return jax.lax.map(
+                lambda a: fit(a[0], a[1], a[2], warm=tuple(a[3:])),
+                (ts, ys, keys) + warm)
         return jax.lax.map(lambda tyk: fit(tyk[0], tyk[1], tyk[2]),
                            (ts, ys, keys))
 
     row_spec = P(data_axes)
     ens_spec = P(model_axis)
+    in_specs = (row_spec, row_spec, row_spec, ens_spec, ens_spec,
+                P(model_axis, None, None))
+    if warm_rounds:
+        # base-model slices: batch dim over the model axis, trailing dims
+        # replicated (P pads with None)
+        in_specs = in_specs + (P(model_axis),) * 5
     try:
         from jax import shard_map  # jax >= 0.6
         replication_kw = {"check_vma": False}
@@ -127,9 +154,7 @@ def _make_distributed_fit(mesh: Mesh, fcfg: ForestConfig,
         from jax.experimental.shard_map import shard_map
         replication_kw = {"check_rep": False}  # pre-0.6 spelling
     mapped = shard_map(
-        per_device, mesh=mesh,
-        in_specs=(row_spec, row_spec, row_spec, ens_spec, ens_spec,
-                  P(model_axis, None, None)),
+        per_device, mesh=mesh, in_specs=in_specs,
         out_specs=jax.tree_util.tree_map(lambda _: P(model_axis), _result_spec()),
         **replication_kw)
     return jax.jit(mapped)

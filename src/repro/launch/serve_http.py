@@ -18,7 +18,12 @@ dispatch — all behind six endpoints:
                        "labels": [...]}   — null marks a missing cell;
       served synchronously (bridge-clamped solve is per-row conditional,
       not micro-batched) but still metered against the tenant's row bucket
-  GET  /v1/models     registry contents: hot/cold, bytes, versions, stats
+  GET  /v1/models     registry contents: hot/cold, bytes, versions, data
+                      lineage (source-store fingerprint/version), stats
+  POST /v1/models/<name>/reload   {"path": "..."} (path optional when the
+                      model was registered from one) — zero-downtime
+                      hot-swap of freshly saved artifacts into the running
+                      registry; the receiving end of ``repro.launch.refresh``
   GET  /healthz       {"ok": true} once the plane is serving
   GET  /statz         scheduler + admission + registry stats (per-sampler,
                       per-tenant, queue-wait vs device-time breakdown)
@@ -73,7 +78,8 @@ class ServingApp:
                  max_coalesce_rows: Optional[int] = None,
                  default_timeout_s: float = 300.0,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 model_paths: Optional[dict] = None):
         self.registry = registry
         self.admission = admission or AdmissionController(metrics=metrics)
         self.scheduler = InflightScheduler(
@@ -82,6 +88,13 @@ class ServingApp:
             max_coalesce_rows=max_coalesce_rows,
             metrics=metrics, tracer=tracer)
         self.default_timeout_s = float(default_timeout_s)
+        # name -> artifact path of disk-registered models: the default a
+        # bodyless POST /v1/models/<name>/reload re-reads from
+        self.model_paths = dict(model_paths or {})
+        self.tracer = tracer
+        self._m_reloads = (metrics or registry.metrics).counter(
+            "serve_reloads", "Admin model hot-swaps via "
+            "POST /v1/models/<name>/reload", ("model", "status"))
 
     # -- endpoint bodies (status_code, payload) ------------------------------
 
@@ -154,6 +167,40 @@ class ServingApp:
         return 200, {"models": self.registry.describe(),
                      "hot": self.registry.hot_names()}
 
+    def reload_model(self, name: str, body: dict) -> Tuple[int, dict]:
+        """Zero-downtime hot-swap: load freshly saved artifacts from disk
+        and :meth:`ModelRegistry.swap` them under ``name``. In-flight
+        requests finish on the old version; no request is dropped, and a
+        same-shape swap reuses every compiled program (zero recompiles).
+        The live end of the ``repro.launch.refresh`` freshness loop."""
+        from repro.tabgen import TabularGenerator
+        try:
+            path = body.get("path") or self.model_paths.get(name)
+            if not path:
+                raise ValueError(
+                    f"model {name!r} was not registered from a path; the "
+                    "reload body must carry {\"path\": ...}")
+            self.registry.peek(name)            # 404 before touching disk
+            gen = TabularGenerator.load(path)
+            handle = self.registry.swap(name, gen.artifacts,
+                                        schema=gen.schema,
+                                        keep_schema=gen.schema is None)
+        except UnknownModel:
+            self._m_reloads.inc(1, model=name, status="unknown_model")
+            return 404, {"error": f"unknown model {name!r}",
+                         "models": self.registry.names()}
+        except (OSError, ValueError, TypeError, KeyError) as exc:
+            self._m_reloads.inc(1, model=name, status="error")
+            return 400, {"error": f"reload of {name!r} from "
+                                  f"{body.get('path') or path!r} failed: "
+                                  f"{exc}"}
+        self.model_paths[name] = path
+        self._m_reloads.inc(1, model=name, status="ok")
+        lineage = self.registry.describe()[name]["lineage"]
+        return 200, {"model": name, "version": handle.version,
+                     "path": path, "nbytes": handle.nbytes,
+                     "lineage": lineage}
+
     def healthz(self) -> Tuple[int, dict]:
         return 200, {"ok": True, "models": self.registry.names()}
 
@@ -223,8 +270,16 @@ def make_handler(app: ServingApp, *, quiet: bool = True):
             routes = {"/v1/generate": app.generate, "/v1/impute": app.impute}
             fn = routes.get(self.path)
             if fn is None:
+                # path-parameter admin route: /v1/models/<name>/reload
+                parts = self.path.strip("/").split("/")
+                if (len(parts) == 4 and parts[:2] == ["v1", "models"]
+                        and parts[3] == "reload"):
+                    name = parts[2]
+                    fn = lambda body: app.reload_model(name, body)  # noqa: E731
+            if fn is None:
                 self._reply(404, {"error": f"no route {self.path!r}",
-                                  "routes": sorted(routes)})
+                                  "routes": sorted(routes)
+                                  + ["/v1/models/<name>/reload"]})
                 return
             try:
                 length = int(self.headers.get("Content-Length", 0))
@@ -332,7 +387,8 @@ def main(argv=None):
         metrics=metrics)
     app = ServingApp(registry, admission,
                      coalesce_window_s=args.coalesce_window_ms / 1e3,
-                     metrics=metrics, tracer=tracer)
+                     metrics=metrics, tracer=tracer,
+                     model_paths=dict(specs))
     if not args.no_warm:
         print(f"warming {len(specs)} model(s)...", flush=True)
         dt = registry.warmup()

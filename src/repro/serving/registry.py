@@ -358,6 +358,10 @@ class ModelRegistry:
                     "buckets": list(e.handle.buckets),
                     "n_features": e.handle.artifacts.p,
                     "n_classes": e.handle.artifacts.n_y,
+                    # data provenance (rows / store fingerprint+version at
+                    # fit time, base round range) — how an operator spots a
+                    # stale model-vs-store pairing before/after a swap
+                    "lineage": e.host_artifacts.lineage,
                     **{ev: int(events.get((name, ev), 0))
                        for ev in _EVENTS},
                 }

@@ -26,7 +26,8 @@ shim over these pieces.
 from repro.tabgen.artifacts import ForestArtifacts  # noqa: F401
 from repro.tabgen.facade import TabularGenerator  # noqa: F401
 from repro.tabgen.fitting import (  # noqa: F401
-    PipelineConfig, class_stats_streaming, fit_artifacts, prepare_classes)
+    PipelineConfig, class_stats_streaming, extend_artifacts, fit_artifacts,
+    prepare_classes)
 from repro.tabgen.imputation import impute  # noqa: F401
 from repro.tabgen.samplers import (  # noqa: F401
     default_sampler, get_sampler, list_samplers, register_sampler)

@@ -95,6 +95,12 @@ class ForestArtifacts:
     classes: np.ndarray      # [n_y] original label values (host)
     counts: np.ndarray       # [n_y] class counts (host)
     config: ForestConfig     # static
+    # data lineage: {"rows", "store" {fingerprint, version, n_rows} | None,
+    # "base" {round_range, ...} | None} — host metadata for staleness checks
+    # at swap time. Not a pytree leaf and not aux data (dicts aren't
+    # hashable), so it does not survive a jit boundary; persistence is via
+    # the save/load sidecar.
+    lineage: Optional[dict] = None
 
     # -- pytree protocol ----------------------------------------------------
     # classes/counts go into aux data (as hashable tuples) so a whole
@@ -160,6 +166,19 @@ class ForestArtifacts:
             val_curve=put(self.val_curve, None, ax),
             mins=put(self.mins, ax), maxs=put(self.maxs, ax))
 
+    def extend(self, X, y=None, *, extra_trees: int, **kwargs):
+        """Warm-start continuation: grow every ensemble by ``extra_trees``
+        boosting rounds on (possibly freshly appended) data, reusing this
+        model's scalers and seeded from its trees. Bit-identical to a cold
+        fit run straight to ``n_trees + extra_trees`` on the same data.
+
+        Thin delegate to :func:`repro.tabgen.fitting.extend_artifacts`
+        (imported lazily — fitting imports this module).
+        """
+        from repro.tabgen.fitting import extend_artifacts
+        return extend_artifacts(self, X, y, extra_trees=extra_trees,
+                                **kwargs)
+
     # -- construction -------------------------------------------------------
 
     @classmethod
@@ -224,6 +243,8 @@ class ForestArtifacts:
             "format_version": FORMAT_VERSION,
             "config": dataclasses.asdict(self.config),
         }
+        if self.lineage is not None:
+            meta["lineage"] = self.lineage
         if extra_meta:
             meta.update(extra_meta)
         with open(base + ".json", "w") as f:
@@ -251,7 +272,7 @@ class ForestArtifacts:
                     kw[f] = arr
                 else:
                     kw[f] = jnp.asarray(arr)
-        return cls(config=config, **kw)
+        return cls(config=config, lineage=meta.get("lineage"), **kw)
 
     @staticmethod
     def load_meta(path: str) -> dict:

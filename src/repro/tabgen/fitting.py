@@ -96,7 +96,7 @@ def weighted_edges(x, w, n_bins: int):
 
 
 def prepare_classes(X: np.ndarray, y: Optional[np.ndarray],
-                    row_chunk: int = 65536):
+                    row_chunk: int = 65536, stats=None):
     """Gather rows by class into dense padded [n_y, n_max, p] blocks with
     per-class min-max scalers (Issue 5: static-shape blocks, no boolean
     masks inside the device program).
@@ -110,6 +110,11 @@ def prepare_classes(X: np.ndarray, y: Optional[np.ndarray],
     Bit-identical output: within-class row order is the original row order
     either way (the old sort was stable).
 
+    ``stats`` (classes, counts, mins, maxs) skips the streaming stats pass
+    and pins the per-class scalers — the warm-start path passes the *base
+    model's* mins/maxs here so extension rows land in the exact model space
+    the base trees route in (``counts`` must still describe this data).
+
     Returns (Xc, Wc, classes, counts, mins, maxs).
     """
     if not hasattr(X, "shape"):      # plain sequences still accepted
@@ -118,7 +123,10 @@ def prepare_classes(X: np.ndarray, y: Optional[np.ndarray],
     if y is None:
         y = np.zeros((n,), np.int64)
     y = np.asarray(y)
-    classes, counts, mins, maxs = class_stats_streaming(X, y, row_chunk)
+    if stats is None:
+        classes, counts, mins, maxs = class_stats_streaming(X, y, row_chunk)
+    else:
+        classes, counts, mins, maxs = stats
     n_y = len(classes)
     n_max = int(counts.max())
     Xc = np.zeros((n_y, n_max, p), np.float32)
@@ -162,12 +170,108 @@ def class_stats_streaming(X, y, row_chunk: int = 65536):
 
 
 # ---------------------------------------------------------------------------
+# warm start (the incremental freshness loop)
+# ---------------------------------------------------------------------------
+
+def _check_warm_start(base: ForestArtifacts, fcfg: ForestConfig,
+                      p: int) -> None:
+    """Refuse an extension whose config/data can't continue ``base``.
+
+    Every :class:`ForestConfig` field but ``n_trees`` must match (the trees
+    being replayed were grown under those hyperparameters), ``n_trees`` must
+    strictly grow, and the feature count must agree. Errors name every
+    differing field with both values.
+    """
+    bc = dataclasses.asdict(base.config)
+    nc = dataclasses.asdict(fcfg)
+    diffs = [k for k in nc if k != "n_trees" and bc.get(k) != nc[k]]
+    if diffs:
+        raise ValueError(
+            "warm_start config mismatch — an extension may only change "
+            "n_trees; differing fields: " + "; ".join(
+                f"{k}: base={bc.get(k)!r} != new={nc[k]!r}" for k in diffs))
+    if fcfg.n_trees <= base.config.n_trees:
+        raise ValueError(
+            f"warm_start needs n_trees > the base model's "
+            f"{base.config.n_trees} (got {fcfg.n_trees}); use "
+            "extend_artifacts(..., extra_trees=K) to grow by K rounds")
+    if base.p != p:
+        raise ValueError(f"warm_start base was fit on p={base.p} features "
+                         f"but this data has p={p}")
+
+
+def _check_warm_classes(base: ForestArtifacts, classes) -> None:
+    """The extension data's label set must be exactly the base model's —
+    each (timestep, class) ensemble continues an existing one; a new class
+    would need ensembles that don't exist yet (full refit territory)."""
+    if not np.array_equal(np.asarray(classes), np.asarray(base.classes)):
+        raise ValueError(
+            f"warm_start class mismatch: base model has classes "
+            f"{np.asarray(base.classes).tolist()} but this data has "
+            f"{np.asarray(classes).tolist()}; extension data must cover "
+            "exactly the base label set (retrain from scratch otherwise)")
+
+
+def _warm_host_arrays(base: ForestArtifacts):
+    """Base model buffers as host numpy, in ``fit_boosted`` warm order:
+    (feat, thr_val, leaf, val_curve, best_round), each ``[n_t, n_y, n_sub,
+    ...]`` — sliced per (timestep, class) cell by the batch drivers."""
+    return tuple(np.asarray(getattr(base, f)) for f in
+                 ("feat", "thr_val", "leaf", "val_curve", "best_round"))
+
+
+def _build_lineage(X, n_rows: int, p: int, fcfg: ForestConfig,
+                   base: Optional[ForestArtifacts]) -> dict:
+    """Data provenance recorded on the trained artifacts (and persisted in
+    the save sidecar): enough for a serving host to detect a stale
+    model-vs-store pairing at swap time."""
+    lin = {"rows": int(n_rows), "p": int(p), "store": None, "base": None}
+    if isinstance(X, DatasetStore):
+        lin["store"] = {"fingerprint": X.fingerprint,
+                        "version": int(X.version),
+                        "n_rows": int(X.n_rows)}
+    if base is not None:
+        # one level of history: the base's own lineage minus *its* base,
+        # so a nightly refresh chain doesn't nest without bound
+        prev = {k: v for k, v in (base.lineage or {}).items() if k != "base"}
+        lin["base"] = {
+            "round_range": [int(base.config.n_trees), int(fcfg.n_trees)],
+            "lineage": prev or None,
+        }
+    return lin
+
+
+def extend_artifacts(base: ForestArtifacts, X, y=None, *, extra_trees: int,
+                     **kwargs) -> ForestArtifacts:
+    """Grow ``base`` by ``extra_trees`` boosting rounds per ensemble.
+
+    Boosting is additive, so an extension from round R to R + K never
+    recomputes the first R rounds: the base trees seed every ensemble and
+    their running predictions are replayed (see
+    :mod:`repro.forest.boosting`). The base's per-class scalers are reused
+    — extension rows are binned in the model space the base trees route in
+    — and on the *same* data the result is bit-identical to
+    :func:`fit_artifacts` run straight to R + K with the same seed.
+
+    ``X`` may be fresh (e.g. a :class:`~repro.data.store.DatasetStore`
+    grown by :meth:`~repro.data.store.DatasetStore.append`); the new rounds
+    then fit the residuals of the base trees on the new data. ``kwargs``
+    forward to :func:`fit_artifacts` (mesh, checkpoint_dir, seed, ...).
+    """
+    if extra_trees <= 0:
+        raise ValueError(f"extra_trees must be positive, got {extra_trees}")
+    fcfg = dataclasses.replace(
+        base.config, n_trees=base.config.n_trees + int(extra_trees))
+    return fit_artifacts(X, y, fcfg, warm_start=base, **kwargs)
+
+
+# ---------------------------------------------------------------------------
 # checkpoint manifest
 # ---------------------------------------------------------------------------
 
 def _manifest_fingerprint(fcfg: ForestConfig, *, n_t: int, n_y: int,
                           batch_size: int, n_rows: int, p: int,
-                          trainer: str) -> dict:
+                          trainer: str, warm_rounds: int = 0) -> dict:
     """Everything that determines which ensemble lands in which batch file.
 
     Resuming under a different ``ensembles_per_batch`` or ``ForestConfig``
@@ -177,14 +281,21 @@ def _manifest_fingerprint(fcfg: ForestConfig, *, n_t: int, n_y: int,
     another run's grid — completed batches never retrain) and the sharded
     trainer's mesh shape (batches are whole trained ensembles, so a
     checkpoint may be resumed on a different device count — elastic resume).
+
+    A warm-start fit adds ``warm_start: <base round count>`` so its batch
+    files never mix with a cold run's; cold fingerprints are unchanged
+    (byte-compatible with pre-warm-start manifests).
     """
-    return {
+    fp = {
         "config": dataclasses.asdict(fcfg),
         "grid": [n_t, n_y],
         "ensembles_per_batch": batch_size,
         "data_shape": [int(n_rows), int(p)],
         "trainer": trainer,
     }
+    if warm_rounds:
+        fp["warm_start"] = int(warm_rounds)
+    return fp
 
 
 def _manifest_batch_size(checkpoint_dir: str) -> Optional[int]:
@@ -198,7 +309,7 @@ def _manifest_batch_size(checkpoint_dir: str) -> Optional[int]:
 
 def _run_grid_batches(run_batch, grid, bs: int, *,
                       checkpoint_dir: Optional[str], resume: bool,
-                      fingerprint: dict):
+                      fingerprint: dict, warm_base: Optional[dict] = None):
     """Drive the (timestep, class) grid in batches with checkpoint/resume.
 
     ``run_batch(chunk)`` trains ``chunk`` (a list of (ti, yi)) and returns
@@ -207,8 +318,14 @@ def _run_grid_batches(run_batch, grid, bs: int, *,
     streaming checkpoints and the same manifest safety (the pipelined
     driver below shares the :class:`~repro.train.checkpoint.GridManifest`
     too, so the three paths are resume-compatible).
+
+    ``warm_base`` (a warm-start fit's base-run descriptor) lets
+    :meth:`GridManifest.load_done` accept — rather than refuse — a
+    checkpoint dir holding the *base* model's committed batches: the
+    extension retrains every batch and overwrites them in place.
     """
-    manifest = (_ckpt.GridManifest(checkpoint_dir, fingerprint)
+    manifest = (_ckpt.GridManifest(checkpoint_dir, fingerprint,
+                                   warm_base=warm_base)
                 if checkpoint_dir else None)
     done = manifest.load_done(resume) if manifest else set()
 
@@ -265,7 +382,8 @@ _STOP = object()
 def _run_grid_batches_pipelined(dispatch, collect, grid, bs: int, *,
                                 checkpoint_dir: Optional[str], resume: bool,
                                 fingerprint: dict, prefetch,
-                                pcfg: PipelineConfig):
+                                pcfg: PipelineConfig,
+                                warm_base: Optional[dict] = None):
     """Producer/consumer version of :func:`_run_grid_batches`.
 
     Three stages over the same batch sequence, bit-identical results:
@@ -283,7 +401,8 @@ def _run_grid_batches_pipelined(dispatch, collect, grid, bs: int, *,
     updated after its batch file is durably committed, so a crash between
     writer flushes resumes from the last committed batch.
     """
-    manifest = (_ckpt.GridManifest(checkpoint_dir, fingerprint)
+    manifest = (_ckpt.GridManifest(checkpoint_dir, fingerprint,
+                                   warm_base=warm_base)
                 if checkpoint_dir else None)
     done = manifest.load_done(resume) if manifest else set()
 
@@ -441,7 +560,9 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
                   resume: bool = False, ensembles_per_batch: int = 0,
                   mesh=None, data_axes: Optional[Tuple[str, ...]] = None,
                   model_axis: str = "model", row_chunk: int = 65536,
-                  pipeline="auto") -> ForestArtifacts:
+                  pipeline="auto",
+                  warm_start: Optional[ForestArtifacts] = None
+                  ) -> ForestArtifacts:
     """Train all (timestep, class) ensembles; returns portable artifacts.
 
     One jitted+vmapped fit program trains ``ensembles_per_batch`` ensembles
@@ -474,6 +595,14 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
     defaults to the store's own labels. A store-backed fit is bit-identical
     to the in-memory sharded fit of the same rows on the same mesh, and
     their checkpoints interoperate.
+
+    ``warm_start`` seeds every ensemble from an existing
+    :class:`ForestArtifacts` (same config up to ``n_trees``, same feature
+    count and label set) and continues boosting from its trees instead of
+    round 0 — see :func:`extend_artifacts` for the usual entry point. The
+    base model's per-class scalers are reused so extension rows are binned
+    in the space the base trees route in; on identical data the result is
+    bit-identical to a cold fit run straight to the new ``n_trees``.
     """
     if isinstance(mesh, str):
         if mesh != "auto":
@@ -498,9 +627,20 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
             X, y, fcfg, mesh, seed=seed, checkpoint_dir=checkpoint_dir,
             resume=resume, ensembles_per_batch=ensembles_per_batch,
             data_axes=data_axes, model_axis=model_axis, row_chunk=row_chunk,
-            pipeline=pipeline)
+            pipeline=pipeline, warm_start=warm_start)
 
-    Xc, Wc, classes, counts, mins, maxs = prepare_classes(X, y)
+    stats = None
+    if warm_start is not None:
+        Xs = X if hasattr(X, "shape") else np.asarray(X, np.float32)
+        _check_warm_start(warm_start, fcfg, int(np.shape(Xs)[1]))
+        classes, counts, _, _ = class_stats_streaming(Xs, y, row_chunk)
+        _check_warm_classes(warm_start, classes)
+        # pin the base scalers: extension rows must land in the model space
+        # the base trees were grown in (fresh counts keep label sampling
+        # honest on appended data)
+        stats = (classes, counts, np.asarray(warm_start.mins, np.float32),
+                 np.asarray(warm_start.maxs, np.float32))
+    Xc, Wc, classes, counts, mins, maxs = prepare_classes(X, y, stats=stats)
     n_y, n_max, p = Xc.shape
     Xc_d = jnp.asarray(Xc)
     Wc_d = jnp.asarray(Wc)
@@ -510,8 +650,8 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
 
     K = fcfg.duplicate_k
 
-    def fit_one(t, y_idx, eid):
-        """Train the (t, y) ensemble; everything transient lives here."""
+    def ensemble_inputs(t, y_idx, eid):
+        """Noised inputs/codes of the (t, y) ensemble; transient by design."""
         x0 = Xc_d[y_idx]
         w = Wc_d[y_idx]
         x0d = jnp.repeat(x0, K, axis=0)                  # [mK, p]
@@ -527,11 +667,29 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
         if fcfg.int8_codes:   # QuantileDMatrix-style narrow storage
             codes = pack_codes(codes, fcfg.n_bins)
             codes_v = pack_codes(codes_v, fcfg.n_bins)
-        res = fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
-                           codes_v, tgtv, wd, fcfg)
-        return res
+        return codes, tgt, wd, edges, codes_v, tgtv, xt, xtv
 
-    fit_batch = jax.jit(jax.vmap(fit_one, in_axes=(0, 0, 0)))
+    def fit_one(t, y_idx, eid):
+        """Train the (t, y) ensemble; everything transient lives here."""
+        codes, tgt, wd, edges, codes_v, tgtv, _, _ = \
+            ensemble_inputs(t, y_idx, eid)
+        return fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
+                            codes_v, tgtv, wd, fcfg)
+
+    def fit_one_warm(t, y_idx, eid, wf, wt, wl, wvc, wbr):
+        """Continue the (t, y) ensemble from its base-model slice."""
+        codes, tgt, wd, edges, codes_v, tgtv, xt, xtv = \
+            ensemble_inputs(t, y_idx, eid)
+        return fit_ensemble(codes, tgt, wd, edges_with_sentinel(edges),
+                            codes_v, tgtv, wd, fcfg,
+                            warm=(wf, wt, wl, wvc, wbr), x_raw=xt,
+                            val_raw=xtv)
+
+    if warm_start is None:
+        fit_batch = jax.jit(jax.vmap(fit_one, in_axes=(0, 0, 0)))
+    else:
+        Wfeat, Wthr, Wleaf, Wvc, Wbr = _warm_host_arrays(warm_start)
+        fit_batch = jax.jit(jax.vmap(fit_one_warm, in_axes=(0,) * 8))
 
     grid = [(ti, yi) for ti in range(fcfg.n_t) for yi in range(n_y)]
     bs = ensembles_per_batch or max(1, min(len(grid), 8))
@@ -540,17 +698,34 @@ def fit_artifacts(X, y=None, fcfg: ForestConfig = ForestConfig(), *,
         t_arr = jnp.asarray([ts[ti] for ti, _ in chunk], jnp.float32)
         y_arr = jnp.asarray([yi for _, yi in chunk], jnp.int32)
         e_arr = jnp.asarray([ti * n_y + yi for ti, yi in chunk], jnp.int32)
-        res = fit_batch(t_arr, y_arr, e_arr)
+        if warm_start is None:
+            res = fit_batch(t_arr, y_arr, e_arr)
+        else:
+            tis = [ti for ti, _ in chunk]
+            yis = [yi for _, yi in chunk]
+            res = fit_batch(t_arr, y_arr, e_arr,
+                            jnp.asarray(Wfeat[tis, yis]),
+                            jnp.asarray(Wthr[tis, yis]),
+                            jnp.asarray(Wleaf[tis, yis]),
+                            jnp.asarray(Wvc[tis, yis]),
+                            jnp.asarray(Wbr[tis, yis]))
         return {k: np.asarray(getattr(res, k)) for k in RESULT_FIELDS}
 
+    warm_rounds = warm_start.config.n_trees if warm_start else 0
     fingerprint = _manifest_fingerprint(
         fcfg, n_t=fcfg.n_t, n_y=n_y, batch_size=bs,
-        n_rows=np.shape(X)[0], p=p, trainer="single")
+        n_rows=np.shape(X)[0], p=p, trainer="single",
+        warm_rounds=warm_rounds)
+    warm_base = (None if warm_start is None else
+                 {"config": dataclasses.asdict(warm_start.config),
+                  "grid": [fcfg.n_t, n_y]})
     results = _run_grid_batches(run_batch, grid, bs,
                                 checkpoint_dir=checkpoint_dir, resume=resume,
-                                fingerprint=fingerprint)
-    return ForestArtifacts.from_grid_results(results, fcfg.n_t, n_y, mins,
+                                fingerprint=fingerprint, warm_base=warm_base)
+    arts = ForestArtifacts.from_grid_results(results, fcfg.n_t, n_y, mins,
                                              maxs, classes, counts, fcfg)
+    arts.lineage = _build_lineage(X, np.shape(X)[0], p, fcfg, warm_start)
+    return arts
 
 
 # ---------------------------------------------------------------------------
@@ -562,7 +737,8 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
                            ensembles_per_batch: int,
                            data_axes: Optional[Tuple[str, ...]],
                            model_axis: str, row_chunk: int,
-                           pipeline: Optional[PipelineConfig]
+                           pipeline: Optional[PipelineConfig],
+                           warm_start: Optional[ForestArtifacts] = None
                            ) -> ForestArtifacts:
     """shard_map training from host data to :class:`ForestArtifacts`.
 
@@ -608,6 +784,13 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
             y = np.zeros((n,), np.int64)
         classes, counts, mins, maxs = class_stats_streaming(X_np, y,
                                                             row_chunk)
+    if warm_start is not None:
+        _check_warm_start(warm_start, fcfg, p)
+        _check_warm_classes(warm_start, classes)
+        # base scalers, not this data's: the replayed trees route in the
+        # base model's [-1, 1] space (fresh counts stay — label sampling)
+        mins = np.asarray(warm_start.mins, np.float32)
+        maxs = np.asarray(warm_start.maxs, np.float32)
     n_y = len(classes)
     cid_full = np.searchsorted(classes, np.asarray(y)).astype(np.int32)
 
@@ -658,8 +841,19 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
                 f"{m_size}); resume with ensembles_per_batch={stale} on a "
                 "compatible mesh, or retrain with resume=False.")
 
+    warm_rounds = warm_start.config.n_trees if warm_start else 0
     fit = make_distributed_fit(mesh, fcfg, data_axes=data_axes,
-                               model_axis=model_axis)
+                               model_axis=model_axis,
+                               warm_rounds=warm_rounds)
+    if warm_start is not None:
+        Wfeat, Wthr, Wleaf, Wvc, Wbr = _warm_host_arrays(warm_start)
+
+    def warm_slices(chunk):
+        """Base-model slices of one (padded) batch: [bs, n_sub, R, ...]."""
+        tis = [ti for ti, _ in chunk]
+        yis = [yi for _, yi in chunk]
+        return (Wfeat[tis, yis], Wthr[tis, yis], Wleaf[tis, yis],
+                Wvc[tis, yis], Wbr[tis, yis])
 
     def pad(chunk):
         # pad the tail batch by repeating entries: one compiled program for
@@ -668,7 +862,10 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
 
     fingerprint = _manifest_fingerprint(
         fcfg, n_t=fcfg.n_t, n_y=n_y, batch_size=bs, n_rows=n, p=p,
-        trainer="sharded")
+        trainer="sharded", warm_rounds=warm_rounds)
+    warm_base = (None if warm_start is None else
+                 {"config": dataclasses.asdict(warm_start.config),
+                  "grid": [fcfg.n_t, n_y]})
 
     # one vectorized dispatch for every ensemble's PRNG keys (devices are
     # idle here; values bit-identical to the per-batch fold_in pairs) —
@@ -678,28 +875,35 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
 
     if pipeline is None:
         def run_batch(chunk):
-            t_np, y_np, keys = build_batch_inputs(pad(chunk), ts, n_y, root,
+            padded = pad(chunk)
+            t_np, y_np, keys = build_batch_inputs(padded, ts, n_y, root,
                                                   key_table)
             x0_sh, w_sh, c_sh = rows()
+            extra = (() if warm_start is None else
+                     tuple(jnp.asarray(a) for a in warm_slices(padded)))
             res = fit(x0_sh, w_sh, c_sh, jnp.asarray(t_np),
-                      jnp.asarray(y_np), jnp.asarray(keys))
+                      jnp.asarray(y_np), jnp.asarray(keys), *extra)
             # gather per-model-axis shards back to host, drop pad entries
             return {k: np.asarray(getattr(res, k))[:len(chunk)]
                     for k in RESULT_FIELDS}
 
         results = _run_grid_batches(run_batch, grid, bs,
                                     checkpoint_dir=checkpoint_dir,
-                                    resume=resume, fingerprint=fingerprint)
+                                    resume=resume, fingerprint=fingerprint,
+                                    warm_base=warm_base)
     else:
         def prefetch(chunk):
-            # input-build stage: row shards (once) + this batch's grid cells
-            return rows() + build_batch_inputs(pad(chunk), ts, n_y, root,
-                                               key_table)
+            # input-build stage: row shards (once) + this batch's grid
+            # cells (+ the base-model slices when warm starting)
+            padded = pad(chunk)
+            extra = () if warm_start is None else warm_slices(padded)
+            return (rows() + build_batch_inputs(padded, ts, n_y, root,
+                                                key_table) + extra)
 
         def dispatch(inputs):
-            x0_sh, w_sh, c_sh, t_np, y_np, keys = inputs
-            return fit(x0_sh, w_sh, c_sh, jnp.asarray(t_np),
-                       jnp.asarray(y_np), jnp.asarray(keys))
+            x0_sh, w_sh, c_sh = inputs[:3]
+            rest = [jnp.asarray(a) for a in inputs[3:]]
+            return fit(x0_sh, w_sh, c_sh, *rest)
 
         def collect(res, n_real):
             # deferred bookkeeping: one explicit sync for the whole batch,
@@ -712,6 +916,8 @@ def _fit_artifacts_sharded(X, y, fcfg: ForestConfig, mesh, *, seed: int,
         results = _run_grid_batches_pipelined(
             dispatch, collect, grid, bs, checkpoint_dir=checkpoint_dir,
             resume=resume, fingerprint=fingerprint, prefetch=prefetch,
-            pcfg=pipeline)
-    return ForestArtifacts.from_grid_results(results, fcfg.n_t, n_y, mins,
+            pcfg=pipeline, warm_base=warm_base)
+    arts = ForestArtifacts.from_grid_results(results, fcfg.n_t, n_y, mins,
                                              maxs, classes, counts, fcfg)
+    arts.lineage = _build_lineage(X, n, p, fcfg, warm_start)
+    return arts

@@ -100,6 +100,23 @@ def reshard(tree, mesh, specs):
     return jax.tree_util.tree_map(put, tree, specs)
 
 
+def describe_fingerprint_mismatch(stale, new, *, stale_name: str = "on-disk",
+                                  new_name: str = "requested") -> str:
+    """Human-readable diff of two fingerprint dicts: every differing key
+    with both values, then both full fingerprints — shared by the
+    :class:`GridManifest` and :mod:`repro.data.store` refusal errors so an
+    operator never has to open the manifest to see *what* mismatched."""
+    stale = stale or {}
+    new = new or {}
+    lines = [f"  {k}: {stale_name}={stale.get(k)!r} != "
+             f"{new_name}={new.get(k)!r}"
+             for k in sorted(set(stale) | set(new))
+             if stale.get(k) != new.get(k)]
+    return ("differing keys:\n" + "\n".join(lines)
+            + f"\n{stale_name} fingerprint: {json.dumps(stale, sort_keys=True)}"
+            + f"\n{new_name} fingerprint: {json.dumps(new, sort_keys=True)}")
+
+
 # ---------------------------------------------------------------------------
 # batch-grid manifest (forest trainers: Issue-3 streaming checkpoints)
 # ---------------------------------------------------------------------------
@@ -148,6 +165,17 @@ class GridManifest:
     fingerprint — the PR-2 safety that keeps stale ``batch_*.npz`` files
     from silently mixing with fresh ones.
 
+    Warm-start mode: ``warm_base`` describes the *base* run of a
+    warm-start extension (``{"config": <base ForestConfig asdict>, "grid":
+    [n_t, n_y]}``). A checkpoint dir whose manifest matches ``warm_base``
+    on those keys is accepted with an empty done-set instead of refused:
+    the extension retrains every batch (its round buffers are wider than
+    the base's, so the base ``batch_*.npz`` files aren't reusable) and
+    overwrites them in place, rewriting the manifest under the new
+    fingerprint on the first :meth:`mark_done`. Batch size / data shape
+    are deliberately not matched — an extension may run with a different
+    batching and typically fits *more* rows than the base did.
+
     Async-safe by construction: :meth:`mark_done` may be called from the
     pipelined trainer's writer thread while the main thread dispatches later
     batches (or, in principle, from several writers completing out of
@@ -157,12 +185,24 @@ class GridManifest:
     committed — so every state a crash can expose resumes correctly.
     """
 
-    def __init__(self, directory: str, fingerprint: dict):
+    def __init__(self, directory: str, fingerprint: dict,
+                 warm_base: Optional[dict] = None):
         self.directory = directory
         self.path = os.path.join(directory, "manifest.json")
         self.fingerprint = fingerprint
+        self.warm_base = warm_base
         self._lock = threading.Lock()
         self._done: set = set()
+
+    def _is_warm_base(self, stale: Optional[dict]) -> bool:
+        """Does the on-disk manifest belong to this extension's base run?"""
+        if self.warm_base is None or not stale:
+            return False
+        # config (incl. the base's n_trees) + grid is the whole match: an
+        # extension may batch differently and usually fits more rows, and a
+        # base that was itself warm-started is still a valid base
+        return (stale.get("config") == self.warm_base.get("config")
+                and stale.get("grid") == self.warm_base.get("grid"))
 
     def load_done(self, resume: bool) -> set:
         """The committed batch keys; refuses mismatched-fingerprint resume."""
@@ -170,18 +210,25 @@ class GridManifest:
             with open(self.path) as f:
                 manifest = json.load(f)
             stale = manifest.get("fingerprint")
-            if stale != self.fingerprint:
-                diff = sorted(k for k in self.fingerprint
-                              if (stale or {}).get(k) != self.fingerprint[k])
+            if stale == self.fingerprint:
+                done = set(tuple(e) for e in manifest["batches"])
+                with self._lock:
+                    self._done = done
+            elif self._is_warm_base(stale):
+                # fingerprint-compatible base checkpoint: accept, but no
+                # batch is reusable (base files hold fewer-round buffers) —
+                # the extension overwrites them all
+                with self._lock:
+                    self._done = set()
+            else:
                 raise ValueError(
                     f"checkpoint at {self.directory} was written under a "
-                    f"different run configuration (mismatched: {diff}); "
-                    "resuming would mix stale batch_*.npz files with new "
-                    "ones. Pass resume=False (or a fresh checkpoint_dir) "
-                    "to retrain.")
-            done = set(tuple(e) for e in manifest["batches"])
-            with self._lock:
-                self._done = done
+                    "mismatched run configuration; resuming would mix stale "
+                    "batch_*.npz files with new ones. Pass resume=False "
+                    "(or a fresh checkpoint_dir) to retrain.\n"
+                    + describe_fingerprint_mismatch(
+                        stale, self.fingerprint, stale_name="checkpoint",
+                        new_name="requested"))
         with self._lock:
             return set(self._done)
 
