@@ -25,6 +25,14 @@ class, ms) are recorded for the trajectory; the acceptance story is bulk
 saturating the device while the interactive p99 stays bounded (interactive
 pops before bulk at every dispatch).
 
+SLO accounting (PR 10): both arms run with the per-priority objectives
+below (module constants, NOT part of the gated ``config`` identity — the
+committed trajectory's record keys must not change) and report violation
+counts per arm. With ``json_path`` set, the in-flight arm's span ring and
+slow-request log land next to the JSON as ``*_trace.jsonl`` /
+``*_slowlog.jsonl`` — the nightly lane uploads them as artifacts, so a
+latency regression comes with the per-request timelines that explain it.
+
 CI-container caveat (same one the training pipeline records): on the
 2-core box the XLA device computation itself occupies both cores, so the
 host work the in-flight arm overlaps (unpad/shuffle/slice/deliver + batch
@@ -43,6 +51,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.config import ForestConfig
+from repro.obs import SlowLog
 from repro.data.tabular import synthetic_resource_dataset
 from repro.tabgen import fit_artifacts
 
@@ -56,6 +65,12 @@ FULL = dict(n_fit=2000, p=10, n_y=2, n_t=8, n_trees=20,
             ia_requests=300, ia_rows=32, ia_rate_per_s=600.0,
             bk_requests=120, bk_rows=2048, bk_rate_per_s=400.0,
             buckets=(64, 2048), reps=5)
+
+#: per-priority latency objectives both arms are measured against.  These
+#: are *observability* constants (violation counts ride the record, the
+#: per-request timelines ride the artifacts) — deliberately outside the
+#: ``config`` dicts above so check_bench record identities are unchanged.
+SLO = {"interactive": 0.25, "bulk": 10.0}
 
 
 def _schedule(cfg: dict, seed: int = 0):
@@ -122,13 +137,27 @@ def main(quick: bool = True, json_path: str = None) -> None:
     art = fit_artifacts(X, y, fcfg, seed=0)
     schedule = _schedule(cfg)
 
-    def build(sync_resolve):
+    # observability artifacts ride next to the JSON (nightly uploads the
+    # whole --json-dir): the in-flight arm's span ring + any requests that
+    # blew the interactive objective, with their per-span timelines.
+    trace_path = slow_path = None
+    if json_path:
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        stem = os.path.splitext(json_path)[0]
+        trace_path = stem + "_trace.jsonl"
+        slow_path = stem + "_slowlog.jsonl"
+
+    def build(sync_resolve, slow_log=None):
         s = ForestServer(art, buckets=cfg["buckets"],
-                         sync_resolve=sync_resolve)
+                         sync_resolve=sync_resolve,
+                         slo=SLO, slow_log=slow_log)
         s.warmup()
         return s
 
-    servers = {"inflight": build(False), "drain": build(True)}
+    slow = SlowLog(slow_path, SLO["interactive"]) if slow_path else None
+    servers = {"inflight": build(False, slow), "drain": build(True)}
     results = {"inflight": [], "drain": []}
     lats = {"inflight": [], "drain": []}
     order = ["inflight", "drain", "drain", "inflight"]  # ABBA
@@ -139,6 +168,12 @@ def main(quick: bool = True, json_path: str = None) -> None:
             lats[arm].append(lat)
     stats = {arm: servers[arm].scheduler.stats_snapshot()
              for arm in servers}
+    if trace_path:
+        n_spans = servers["inflight"].tracer.export_jsonl(trace_path)
+        emit("serving/trace", "-", f"{trace_path}|spans={n_spans}")
+        if slow is not None:
+            emit("serving/slowlog", "-",
+                 f"{slow_path}|written={slow.written}")
     for arm in servers:
         servers[arm].stop()
 
@@ -174,17 +209,33 @@ def main(quick: bool = True, json_path: str = None) -> None:
                 stats["inflight"]["max_inflight_observed"],
             "inflight_batches": stats["inflight"]["batches"],
             "inflight_dropped_deadline": stats["inflight"]["dropped_deadline"],
+            # SLO accounting over all reps (objectives: module SLO consts;
+            # not rows_per_sec-suffixed, so check_bench leaves them ungated)
+            "slo_interactive_objective_s": SLO["interactive"],
+            "slo_bulk_objective_s": SLO["bulk"],
+            "inflight_slo_violations_interactive":
+                stats["inflight"]["slo"]["interactive"]["violations"],
+            "inflight_slo_violations_bulk":
+                stats["inflight"]["slo"]["bulk"]["violations"],
+            "drain_slo_violations_interactive":
+                stats["drain"]["slo"]["interactive"]["violations"],
+            "drain_slo_violations_bulk":
+                stats["drain"]["slo"]["bulk"]["violations"],
         },
     }
     emit("serving/open_loop/inflight",
          f"{1e6 / best['inflight']:.2f}",
          f"rows_per_sec={best['inflight']:.0f}|"
          f"speedup_vs_drain={record['serving']['inflight_vs_drain_speedup']:.2f}x|"
-         f"interactive_p99_ms={ia_p99:.1f}|bulk_p99_ms={bk_p99:.1f}")
+         f"interactive_p99_ms={ia_p99:.1f}|bulk_p99_ms={bk_p99:.1f}|"
+         f"slo_viol_ia={record['serving']['inflight_slo_violations_interactive']}|"
+         f"slo_viol_bk={record['serving']['inflight_slo_violations_bulk']}")
     emit("serving/open_loop/drain_reference",
          f"{1e6 / best['drain']:.2f}",
          f"rows_per_sec={best['drain']:.0f}|"
-         f"interactive_p99_ms={d_ia_p99:.1f}")
+         f"interactive_p99_ms={d_ia_p99:.1f}|"
+         f"slo_viol_ia={record['serving']['drain_slo_violations_interactive']}|"
+         f"slo_viol_bk={record['serving']['drain_slo_violations_bulk']}")
 
     if json_path:
         d = os.path.dirname(json_path)

@@ -42,7 +42,7 @@ echo "== serving HTTP smoke (control plane end to end) =="
 # boot the multi-tenant front end on an ephemeral port, hit /healthz and
 # /v1/generate over real HTTP, then SIGINT it and require a clean exit
 python - <<'EOF'
-import json, os, signal, subprocess, sys, urllib.request
+import json, os, signal, subprocess, sys, urllib.error, urllib.request
 env = dict(os.environ, PYTHONUNBUFFERED="1")
 proc = subprocess.Popen(
     [sys.executable, "-m", "repro.launch.serve_http", "--demo", "--port", "0",
@@ -65,11 +65,25 @@ req = urllib.request.Request(
     headers={"Content-Type": "application/json"})
 with urllib.request.urlopen(req, timeout=120) as r:
     body = json.load(r)
+    rid = r.headers["X-Repro-Request-Id"]
 assert len(body["rows"]) == 48 and len(body["labels"]) == 48, body.keys()
+# the response header is the trace handle: it must match the body and
+# resolve through /v1/trace/<id> to a queue+device timeline
+assert rid and rid == body["request_id"], (rid, body.get("request_id"))
+with urllib.request.urlopen(base + "/v1/trace/" + rid, timeout=60) as r:
+    trace = json.load(r)
+assert trace["summary"]["rows"] == 48, trace["summary"]
+assert any(s["name"] == "serve.device" for s in trace["spans"]), trace
+try:
+    urllib.request.urlopen(base + "/v1/trace/deadbeef", timeout=60)
+    raise AssertionError("bogus trace id did not 404")
+except urllib.error.HTTPError as e:
+    assert e.code == 404, e.code
 # /metrics is Prometheus text and must reconcile exactly with /statz
 with urllib.request.urlopen(base + "/metrics", timeout=60) as r:
     ctype, prom = r.headers["Content-Type"], r.read().decode()
 assert ctype.startswith("text/plain; version=0.0.4"), ctype
+assert "resource_rss_bytes" in prom, "ResourceMonitor gauges missing"
 rows_total = sum(
     float(line.rsplit(" ", 1)[1]) for line in prom.splitlines()
     if line.startswith("serving_rows_total"))
@@ -77,6 +91,12 @@ with urllib.request.urlopen(base + "/statz", timeout=60) as r:
     statz = json.load(r)
 assert rows_total == statz["scheduler"]["rows"] == 48, (
     rows_total, statz["scheduler"]["rows"])
+# the traced timeline reconciles with the aggregate counters: one request,
+# so its queue wait and device time ARE the scheduler totals
+q = next(s for s in trace["spans"] if s["name"] == "serve.queue")
+d_sp = next(s for s in trace["spans"] if s["name"] == "serve.device")
+assert abs(q["duration_s"] - statz["scheduler"]["queue_wait_s"]) < 1e-9
+assert abs(d_sp["duration_s"] - statz["scheduler"]["device_s"]) < 1e-9
 proc.send_signal(signal.SIGINT)
 proc.wait(timeout=60)
 rest = proc.stdout.read()

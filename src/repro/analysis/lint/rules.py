@@ -21,6 +21,10 @@ history (see ``git log`` / CHANGES.md):
 * **PL001** — PR 4: the tree-predict ``pallas_call`` asserted
   ``n % rows_block == 0``, which crashed odd serving buckets and oversize
   exact-size requests until the wrapper learned to pad.
+* **OB001** — PR 10: a ``Tracer.start()`` span that is not ``.end()``ed
+  on every path never records — an early ``return`` or an exception
+  between start and end silently drops the span from the ring (and its
+  request from ``/v1/trace``), skewing queue-wait histograms low.
 
 The rules are lexical-order heuristics, not a dataflow engine: they favour
 catching the historical pattern with near-zero false positives on this tree.
@@ -667,6 +671,169 @@ def _has_divisibility_guard(fn: ast.AST) -> bool:
                                     for b in node.body for s in ast.walk(b)):
                 return True
     return False
+
+
+# ---------------------------------------------------------------------------
+# OB001 — span leaks
+# ---------------------------------------------------------------------------
+
+#: receivers that look like tracers: ``tracer.start``, ``self.tracer.start``,
+#: ``self._tracer.start`` — the heuristic key that keeps ``thread.start()``
+#: and ``profiler.start_trace`` out of scope
+_TRACER_RECV_RE = re.compile(r"(^|[._])tracer$", re.IGNORECASE)
+
+#: parents under which a bare read of the span variable does NOT hand it to
+#: someone else: attribute access (``sp.end()`` / ``sp.attrs``), truthiness
+#: and comparison tests.  Anything else — call argument, keyword, return,
+#: yield, container literal, plain aliasing assignment — is an *escape*:
+#: ownership (and the duty to end) may have moved, so the rule stays quiet.
+_NONESCAPE_PARENTS = (ast.Attribute, ast.Compare, ast.BoolOp, ast.UnaryOp,
+                      ast.Expr, ast.If, ast.While, ast.Assert)
+
+
+def _own_scope(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk ``fn``'s own statements, not nested def/lambda bodies."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _is_end_attr(node: ast.AST, var: str) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "end"
+            and isinstance(node.value, ast.Name) and node.value.id == var)
+
+
+def _span_suffix(body: List[ast.stmt], assign: ast.stmt
+                 ) -> Optional[List[ast.stmt]]:
+    """The statements that execute after ``assign``: the rest of its block,
+    then the rest of each enclosing block (straight-line approximation)."""
+    for i, s in enumerate(body):
+        if s is assign:
+            return list(body[i + 1:])
+        blocks = []
+        if isinstance(s, (ast.If, ast.For, ast.AsyncFor, ast.While)):
+            blocks = [s.body, s.orelse]
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            blocks = [s.body]
+        elif isinstance(s, ast.Try):
+            blocks = [s.body, *[h.body for h in s.handlers],
+                      s.orelse, s.finalbody]
+        for blk in blocks:
+            rest = _span_suffix(blk, assign)
+            if rest is not None:
+                return rest + list(body[i + 1:])
+    return None
+
+
+def _span_states(var: str, stmts, states: Set[Tuple[bool, bool]]
+                 ) -> Set[Tuple[bool, bool]]:
+    """Fold ``stmts`` over a set of (ended, exited) states.  Loops count
+    for nothing (zero iterations is always a possible path); an exited
+    state passes through unchanged."""
+    for s in stmts:
+        nxt: Set[Tuple[bool, bool]] = set()
+        for (ended, exited) in states:
+            if exited:
+                nxt.add((ended, exited))
+            else:
+                nxt |= _span_stmt(var, s, ended)
+        states = nxt
+    return states
+
+
+def _span_stmt(var: str, s: ast.stmt, ended: bool) -> Set[Tuple[bool, bool]]:
+    if isinstance(s, _TERMINATORS):
+        return {(ended, True)}
+    if isinstance(s, ast.If):
+        seed = {(ended, False)}
+        return (_span_states(var, s.body, seed)
+                | _span_states(var, s.orelse, seed))
+    if isinstance(s, ast.Try):
+        seed = {(ended, False)}
+        mid = _span_states(var, s.body + s.orelse, seed)
+        for h in s.handlers:
+            mid |= _span_states(var, h.body, seed)
+        out: Set[Tuple[bool, bool]] = set()
+        for (e, x) in mid:
+            for (e2, x2) in _span_states(var, s.finalbody, {(e, False)}):
+                out.add((e2, x or x2))
+        return out
+    if isinstance(s, (ast.With, ast.AsyncWith)):
+        return _span_states(var, s.body, {(ended, False)})
+    if isinstance(s, (ast.For, ast.AsyncFor, ast.While,
+                      ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return {(ended, False)}
+    # simple statement: does it end the span?
+    if any(_is_end_attr(node, var) for node in ast.walk(s)):
+        return {(True, False)}
+    return {(ended, False)}
+
+
+@rule("OB001", "Tracer.start() span not .end()ed on every path")
+def check_span_leaks(tree: ast.Module, source: str, path: str):
+    for fn in _functions(tree):
+        parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(fn):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+        own_list = list(_own_scope(fn))
+        own = set(own_list)
+        # candidates: var = <something ending in "tracer">.start(...)
+        for assign in own_list:
+            if not (isinstance(assign, ast.Assign)
+                    and len(assign.targets) == 1
+                    and isinstance(assign.targets[0], ast.Name)
+                    and isinstance(assign.value, ast.Call)
+                    and isinstance(assign.value.func, ast.Attribute)
+                    and assign.value.func.attr == "start"
+                    and _TRACER_RECV_RE.search(
+                        _dotted(assign.value.func.value))):
+                continue
+            var = assign.targets[0].id
+            in_nested = skip = rebound = False
+            ends_own = False
+            for node in ast.walk(fn):
+                if node is assign.targets[0]:
+                    continue
+                if isinstance(node, ast.Name) and node.id == var:
+                    if node not in own:
+                        in_nested = True  # closure capture: can't reason
+                        continue
+                    if isinstance(node.ctx, ast.Store):
+                        rebound = True
+                        continue
+                    parent = parents.get(node)
+                    if _is_end_attr(parent, var):
+                        ends_own = True
+                    elif not isinstance(parent, _NONESCAPE_PARENTS):
+                        skip = True  # escaped: handed to someone else
+            if skip or rebound or in_nested:
+                continue
+            if not ends_own:
+                yield Finding(
+                    "OB001", path, assign.lineno, assign.col_offset,
+                    f"span '{var}' from Tracer.start() is never .end()ed — "
+                    "an unended span never records (it silently vanishes "
+                    "from the ring and /v1/trace). Use `with tracer.span("
+                    "...)` for scoped work, or end it on every path.")
+                continue
+            suffix = _span_suffix(fn.body, assign)
+            if suffix is None:
+                continue
+            states = _span_states(var, suffix, {(False, False)})
+            if any(not e for (e, _) in states):
+                yield Finding(
+                    "OB001", path, assign.lineno, assign.col_offset,
+                    f"span '{var}' from Tracer.start() is not .end()ed on "
+                    "every path — an early return/raise between start and "
+                    "end drops the span (and its request's trace) on the "
+                    "floor. Use `with tracer.span(...)`, or end the span "
+                    "in a finally/on every branch.")
 
 
 @rule("PL001", "pallas_call grid divides an input dim with no padding guard")

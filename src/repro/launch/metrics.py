@@ -22,6 +22,9 @@ The module is also a tiny CLI for smoke tests and docs examples:
 
 fabricates a counter/histogram pair in a scratch registry and prints the
 rendered exposition, exercising the full render path with no model fit.
+``--resource`` takes one :class:`repro.obs.ResourceMonitor` sample first,
+so the dump answers "what does this process hold right now" (RSS, device
+buffers, jit-cache entries) without standing up a server.
 """
 from __future__ import annotations
 
@@ -56,7 +59,15 @@ def main(argv=None):
     ap.add_argument("--demo", action="store_true",
                     help="populate a scratch registry with sample "
                          "instruments and dump it (render-path smoke)")
+    ap.add_argument("--resource", action="store_true",
+                    help="take one ResourceMonitor sample (RSS, device "
+                         "memory, jit-cache size) onto the default "
+                         "registry before dumping")
     args = ap.parse_args(argv)
+
+    if args.resource:
+        from repro.obs import ResourceMonitor
+        ResourceMonitor().sample()
 
     if args.demo:
         reg = MetricsRegistry()

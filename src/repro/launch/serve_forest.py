@@ -79,7 +79,8 @@ class ForestServer:
                  sync_resolve: bool = False,
                  admission: Optional[AdmissionController] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 slo=None, slo_error_budget: float = 0.01, slow_log=None):
         # one registry + tracer shared by every component of this server:
         # scheduler, admission, and model registry export one family set
         self.metrics = metrics or MetricsRegistry()
@@ -94,7 +95,8 @@ class ForestServer:
             max_coalesce_rows=max_coalesce_rows,
             coalesce_window_s=coalesce_window_s,
             inflight_depth=inflight_depth, sync_resolve=sync_resolve,
-            metrics=self.metrics, tracer=self.tracer)
+            metrics=self.metrics, tracer=self.tracer,
+            slo=slo, slo_error_budget=slo_error_budget, slow_log=slow_log)
         self.mesh = self.registry.mesh
         self.impl = impl
         self.schema = schema

@@ -3,17 +3,28 @@
 Drives the heavy-traffic story end to end: many named models hot in one
 process (LRU device placement), interactive/bulk priority classes,
 per-tenant rate limits with explicit backpressure, in-flight micro-batched
-dispatch — all behind six endpoints:
+dispatch, request-scoped tracing — all behind these endpoints:
 
   POST /v1/generate   {"model": "demo", "n": 128, "sampler": "euler",
                        "tenant": "t0", "priority": "interactive",
                        "deadline_ms": 500, "timeout_s": 60}
-      -> 200 {"model", "version", "n", "rows", "labels",
-              "queue_wait_ms_total": ...}
+      -> 200 {"model", "version", "n", "rows", "labels", "request_id"}
       -> 400 bad arguments / unknown sampler     (ValueError, eager)
       -> 404 unknown model
       -> 429 + Retry-After header                (RateLimited / QueueFull)
       -> 504 deadline exceeded before dispatch
+      Every response (success or error) carries the request's trace id in
+      the body (``request_id``) and the ``X-Repro-Request-Id`` header.
+  GET  /v1/trace/<id> the per-request timeline from the span ring: the
+                      ``serve.queue`` span (admission, queue depth, wait,
+                      batch id) plus the linked ``serve.device`` batch
+                      span (device time, sync, co-batched request count).
+                      404 when the id is unknown *or evicted* — the ring
+                      is bounded; scrape traces promptly.
+  POST /debug/profile {"duration_ms": 500} — bounded jax.profiler capture
+                      into the server's --profile-dir (403 when disabled,
+                      409 while another capture runs, admin-token guarded
+                      via the X-Repro-Admin-Token header when configured)
   POST /v1/impute     {"model": "demo", "rows": [[1.0, null, ...]],
                        "labels": [...]}   — null marks a missing cell;
       served synchronously (bridge-clamped solve is per-row conditional,
@@ -53,13 +64,15 @@ import json
 import os
 import tempfile
 import threading
+import uuid
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.obs import CONTENT_TYPE as _METRICS_CONTENT_TYPE
-from repro.obs import MetricsRegistry, Tracer, render_prometheus
+from repro.obs import (MetricsRegistry, ProfileInProgress, Profiler,
+                       ResourceMonitor, SlowLog, Tracer, render_prometheus)
 from repro.serving import (AdmissionController, DeadlineExceeded,
                            InflightScheduler, ModelRegistry, QueueFull,
                            RateLimited, UnknownModel)
@@ -79,19 +92,31 @@ class ServingApp:
                  default_timeout_s: float = 300.0,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
-                 model_paths: Optional[dict] = None):
+                 model_paths: Optional[dict] = None,
+                 slo: Optional[Dict[str, float]] = None,
+                 slo_error_budget: float = 0.01,
+                 slow_log: Optional[SlowLog] = None,
+                 profiler: Optional[Profiler] = None,
+                 monitor: Optional[ResourceMonitor] = None,
+                 admin_token: Optional[str] = None):
         self.registry = registry
         self.admission = admission or AdmissionController(metrics=metrics)
         self.scheduler = InflightScheduler(
             registry, self.admission,
             coalesce_window_s=coalesce_window_s,
             max_coalesce_rows=max_coalesce_rows,
-            metrics=metrics, tracer=tracer)
+            metrics=metrics, tracer=tracer,
+            slo=slo, slo_error_budget=slo_error_budget, slow_log=slow_log)
         self.default_timeout_s = float(default_timeout_s)
         # name -> artifact path of disk-registered models: the default a
         # bodyless POST /v1/models/<name>/reload re-reads from
         self.model_paths = dict(model_paths or {})
-        self.tracer = tracer
+        # GET /v1/trace reads the scheduler's tracer even when the caller
+        # left this app on the private default pair
+        self.tracer = tracer or self.scheduler.tracer
+        self.profiler = profiler
+        self.monitor = monitor
+        self.admin_token = admin_token
         self._m_reloads = (metrics or registry.metrics).counter(
             "serve_reloads", "Admin model hot-swaps via "
             "POST /v1/models/<name>/reload", ("model", "status"))
@@ -99,6 +124,9 @@ class ServingApp:
     # -- endpoint bodies (status_code, payload) ------------------------------
 
     def generate(self, body: dict) -> Tuple[int, dict]:
+        # the trace id is minted at ingress — before validation — so even
+        # a rejected request is addressable in logs and error responses
+        rid = uuid.uuid4().hex[:16]
         try:
             n = int(body.get("n", 0))
             if n <= 0:
@@ -110,24 +138,28 @@ class ServingApp:
                 tenant=str(body.get("tenant", "default")),
                 priority=str(body.get("priority", "interactive")),
                 deadline_s=None if deadline_ms is None
-                else float(deadline_ms) / 1e3)
+                else float(deadline_ms) / 1e3,
+                request_id=rid)
         except UnknownModel:
             return 404, {"error": f"unknown model {body.get('model')!r}",
-                         "models": self.registry.names()}
+                         "models": self.registry.names(),
+                         "request_id": rid}
         except (RateLimited, QueueFull) as exc:
             return 429, {"error": str(exc),
-                         "retry_after_s": exc.retry_after_s}
+                         "retry_after_s": exc.retry_after_s,
+                         "request_id": rid}
         except (ValueError, TypeError) as exc:
-            return 400, {"error": str(exc)}
+            return 400, {"error": str(exc), "request_id": rid}
         try:
             X, y = fut.result(timeout=float(
                 body.get("timeout_s", self.default_timeout_s)))
         except DeadlineExceeded as exc:
-            return 504, {"error": str(exc)}
+            return 504, {"error": str(exc), "request_id": rid}
         handle = self.registry.peek(model)
         return 200, {"model": model, "version": handle.version, "n": n,
                      "rows": np.asarray(X).tolist(),
-                     "labels": np.asarray(y).tolist()}
+                     "labels": np.asarray(y).tolist(),
+                     "request_id": rid}
 
     def impute(self, body: dict) -> Tuple[int, dict]:
         try:
@@ -201,6 +233,56 @@ class ServingApp:
                      "path": path, "nbytes": handle.nbytes,
                      "lineage": lineage}
 
+    def trace(self, request_id: str) -> Tuple[int, dict]:
+        """Per-request timeline from the span ring: the request's own
+        ``serve.queue`` span plus every ``serve.device`` batch span that
+        *links* it.  The summary reconciles with ``/statz`` because both
+        read the same spans/instruments."""
+        spans = self.tracer.trace(request_id)
+        if not spans:
+            return 404, {"error": f"unknown (or evicted) request id "
+                                  f"{request_id!r}; the span ring is "
+                                  "bounded — scrape traces promptly",
+                         "request_id": request_id}
+        summary: dict = {}
+        for s in spans:
+            if s.name == "serve.queue" and s.trace_id == request_id:
+                summary.update({k: s.attrs[k] for k in
+                                ("model", "sampler", "tenant", "priority",
+                                 "rows", "admission_s", "queue_depth",
+                                 "batch_id", "outcome") if k in s.attrs})
+                summary["queue_wait_s"] = s.duration_s
+        for s in spans:
+            if s.name == "serve.device" and request_id in s.links:
+                summary["batch"] = {
+                    "batch_id": s.attrs.get("batch_id"),
+                    "rows": s.attrs.get("rows"),
+                    "requests": s.attrs.get("requests"),
+                    "device_s": s.duration_s,
+                    "sync_s": s.attrs.get("sync_s"),
+                    "outcome": s.attrs.get("outcome"),
+                }
+        return 200, {"request_id": request_id,
+                     "spans": [s.to_dict() for s in spans],
+                     "summary": summary}
+
+    def profile(self, body: dict) -> Tuple[int, dict]:
+        """Bounded on-demand ``jax.profiler`` capture (POST /debug/profile).
+        One capture at a time; the duration is clamped server-side."""
+        if self.profiler is None:
+            return 403, {"error": "profiling disabled; start serve_http "
+                                  "with --profile-dir"}
+        try:
+            duration_s = float(body.get("duration_ms", 200.0)) / 1e3
+            result = self.profiler.capture(duration_s)
+        except ProfileInProgress as exc:
+            return 409, {"error": str(exc)}
+        except (ValueError, TypeError) as exc:
+            return 400, {"error": str(exc)}
+        except Exception as exc:  # noqa: BLE001 — surfaced, not raised
+            return 500, {"error": f"profiler capture failed: {exc}"}
+        return 200, result
+
     def healthz(self) -> Tuple[int, dict]:
         return 200, {"ok": True, "models": self.registry.names()}
 
@@ -215,9 +297,11 @@ class ServingApp:
         ``main()`` does) this is a single registry; components left on
         private registries are unioned — instrument names are namespaced
         per subsystem, so families never collide."""
-        return 200, render_prometheus(self.scheduler.metrics,
-                                      self.admission.metrics,
-                                      self.registry.metrics)
+        regs = [self.scheduler.metrics, self.admission.metrics,
+                self.registry.metrics]
+        if self.monitor is not None:
+            regs.append(self.monitor.metrics)  # dedup by id in the renderer
+        return 200, render_prometheus(*regs)
 
     def stop(self) -> None:
         self.scheduler.stop()
@@ -240,6 +324,9 @@ def make_handler(app: ServingApp, *, quiet: bool = True):
             self.send_header("Content-Length", str(len(blob)))
             if retry_after is not None:
                 self.send_header("Retry-After", f"{retry_after:.3f}")
+            rid = payload.get("request_id") if isinstance(payload, dict) else None
+            if rid:
+                self.send_header("X-Repro-Request-Id", str(rid))
             self.end_headers()
             self.wfile.write(blob)
 
@@ -257,17 +344,24 @@ def make_handler(app: ServingApp, *, quiet: bool = True):
                 status, text = app.metrics_text()
                 self._reply_text(status, text, _METRICS_CONTENT_TYPE)
                 return
+            if self.path.startswith("/v1/trace/"):
+                rid = self.path[len("/v1/trace/"):]
+                self._reply(*app.trace(rid))
+                return
             routes = {"/healthz": app.healthz, "/statz": app.statz,
                       "/v1/models": app.models}
             fn = routes.get(self.path)
             if fn is None:
                 self._reply(404, {"error": f"no route {self.path!r}",
-                                  "routes": sorted(routes) + ["/metrics"]})
+                                  "routes": sorted(routes)
+                                  + ["/metrics", "/v1/trace/<id>"]})
                 return
             self._reply(*fn())
 
         def do_POST(self):  # noqa: N802
-            routes = {"/v1/generate": app.generate, "/v1/impute": app.impute}
+            routes = {"/v1/generate": app.generate, "/v1/impute": app.impute,
+                      "/debug/profile": app.profile}
+            admin = {"/debug/profile"}
             fn = routes.get(self.path)
             if fn is None:
                 # path-parameter admin route: /v1/models/<name>/reload
@@ -280,6 +374,12 @@ def make_handler(app: ServingApp, *, quiet: bool = True):
                 self._reply(404, {"error": f"no route {self.path!r}",
                                   "routes": sorted(routes)
                                   + ["/v1/models/<name>/reload"]})
+                return
+            if (self.path in admin and app.admin_token is not None
+                    and self.headers.get("X-Repro-Admin-Token")
+                    != app.admin_token):
+                self._reply(401, {"error": "missing or wrong "
+                                           "X-Repro-Admin-Token header"})
                 return
             try:
                 length = int(self.headers.get("Content-Length", 0))
@@ -349,6 +449,29 @@ def main(argv=None):
     ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
                     help="on shutdown, dump the span ring (serve.queue / "
                          "serve.device / serve.sync) as JSON lines")
+    ap.add_argument("--slo-interactive-ms", type=float, default=None,
+                    help="latency objective for the interactive class; "
+                         "requests over it count as SLO violations")
+    ap.add_argument("--slo-bulk-ms", type=float, default=None,
+                    help="latency objective for the bulk class")
+    ap.add_argument("--slo-budget", type=float, default=0.01,
+                    help="allowed violation rate (error budget); "
+                         "/statz reports burn = rate / budget")
+    ap.add_argument("--slow-log", default=None, metavar="PATH",
+                    help="append requests over --slow-threshold-ms (their "
+                         "full span timeline) to this JSONL file")
+    ap.add_argument("--slow-threshold-ms", type=float, default=None,
+                    help="slow-request threshold (default: the interactive "
+                         "SLO objective when set, else 1000ms)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="enable POST /debug/profile; captures land in "
+                         "numbered subdirectories of DIR")
+    ap.add_argument("--admin-token", default=None,
+                    help="require X-Repro-Admin-Token on admin endpoints "
+                         "(/debug/profile)")
+    ap.add_argument("--resource-interval-s", type=float, default=5.0,
+                    help="ResourceMonitor sampling period for the "
+                         "resource_* gauges on /metrics; 0 disables")
     ap.add_argument("--verbose", action="store_true",
                     help="log one line per HTTP request")
     args = ap.parse_args(argv)
@@ -385,15 +508,42 @@ def main(argv=None):
         default_rate=None if args.rate is None
         else (args.rate, args.burst or 4 * args.rate),
         metrics=metrics)
+    slo = {}
+    if args.slo_interactive_ms is not None:
+        slo["interactive"] = args.slo_interactive_ms / 1e3
+    if args.slo_bulk_ms is not None:
+        slo["bulk"] = args.slo_bulk_ms / 1e3
+    slow_log = None
+    if args.slow_log:
+        threshold_s = (args.slow_threshold_ms / 1e3
+                       if args.slow_threshold_ms is not None
+                       else slo.get("interactive", 1.0))
+        slow_log = SlowLog(args.slow_log, threshold_s)
+        print(f"slow-log (> {threshold_s * 1e3:.0f}ms) -> {args.slow_log}",
+              flush=True)
+    profiler = (Profiler(args.profile_dir) if args.profile_dir else None)
+    monitor = None
+    if args.resource_interval_s > 0:
+        monitor = ResourceMonitor(metrics,
+                                  interval_s=args.resource_interval_s,
+                                  admission=admission, registry=registry)
     app = ServingApp(registry, admission,
                      coalesce_window_s=args.coalesce_window_ms / 1e3,
                      metrics=metrics, tracer=tracer,
-                     model_paths=dict(specs))
+                     model_paths=dict(specs),
+                     slo=slo or None, slo_error_budget=args.slo_budget,
+                     slow_log=slow_log, profiler=profiler, monitor=monitor,
+                     admin_token=args.admin_token)
     if not args.no_warm:
         print(f"warming {len(specs)} model(s)...", flush=True)
         dt = registry.warmup()
         app.scheduler.record_warm(dt)
         print(f"warmed in {dt:.2f}s", flush=True)
+    if monitor is not None:
+        # one eager pass before "serving on": the first /metrics scrape
+        # already carries the resource_* gauges (ci_smoke asserts this)
+        monitor.sample()
+        monitor.start()
 
     httpd = make_server(app, args.host, args.port, quiet=not args.verbose)
     host, port = httpd.server_address[:2]
@@ -406,6 +556,8 @@ def main(argv=None):
         print("shutting down...", flush=True)
         httpd.server_close()
         app.stop()
+        if monitor is not None:
+            monitor.stop()
         if args.trace_jsonl:
             n = tracer.export_jsonl(args.trace_jsonl)
             print(f"wrote {n} spans to {args.trace_jsonl}", flush=True)

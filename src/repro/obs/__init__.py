@@ -15,7 +15,15 @@ visibility.  Three stdlib-only pieces:
   threaded through the serving hot path, the fit pipeline, and
   ``DatasetStore.ingest``; queue-wait vs device-time comes from span
   durations, with optional JSONL export and ``jax.profiler``
-  trace-annotation passthrough (``REPRO_OBS_JAX_TRACE=1``).
+  trace-annotation passthrough (``REPRO_OBS_JAX_TRACE=1``).  Spans carry
+  trace context (``trace_id`` / ``links``) so ``Tracer.trace(rid)``
+  reconstructs a per-request timeline; :class:`SlowLog` is the
+  append-only sink for over-threshold request timelines.
+* :mod:`repro.obs.resources` — :class:`ResourceMonitor`, a background
+  sampler publishing ``resource_*`` gauges (RSS, device memory, live
+  array bytes, jit-cache entries, queue depths, hot-model bytes).
+* :mod:`repro.obs.profiling` — :class:`Profiler`, serialized bounded
+  ``jax.profiler`` captures behind ``POST /debug/profile``.
 
 Scoping convention: serving components (scheduler / admission / model
 registry) each default to a *private* registry+tracer for test and
@@ -35,7 +43,9 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
 )
-from repro.obs.tracing import Span, Tracer
+from repro.obs.profiling import ProfileInProgress, Profiler
+from repro.obs.resources import ResourceMonitor
+from repro.obs.tracing import SlowLog, Span, Tracer
 
 __all__ = [
     "CONTENT_TYPE",
@@ -44,6 +54,10 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "ProfileInProgress",
+    "Profiler",
+    "ResourceMonitor",
+    "SlowLog",
     "Span",
     "Tracer",
     "default_registry",

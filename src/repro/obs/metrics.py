@@ -87,9 +87,13 @@ class _Instrument:
     def reset(self, **labels) -> None:
         """Drop series whose labels match the given subset (all if empty).
 
-        Exists for the one legacy surface that wipes stats in place
-        (model re-registration); scrapers see the series restart at zero,
-        which Prometheus treats as a counter reset.
+        Two users: the one legacy surface that wipes stats in place
+        (model re-registration), and sampled gauges whose label sets
+        shrink between passes — ``ResourceMonitor`` resets its per-device
+        gauge before republishing so a freed device's series disappears
+        instead of reporting its last value forever.  Scrapers see a
+        dropped counter series restart at zero, which Prometheus treats
+        as a counter reset.
         """
         with self._lock:
             if not labels:

@@ -206,6 +206,11 @@ class AdmissionController:
             self._m_requests.inc(1, tenant=req.tenant, outcome="admitted")
             self._m_rows.inc(req.n, tenant=req.tenant)
             q.append(req)
+            span = getattr(req, "span", None)
+            if span is not None:
+                # depth *seen at admit* (self included) — the per-request
+                # trace shows how deep the line was when this request joined
+                span.attrs["queue_depth"] = len(q)
             self._m_queued.set(len(q), priority=req.priority)
             self._cond.notify()
 

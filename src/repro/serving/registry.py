@@ -343,6 +343,12 @@ class ModelRegistry:
         with self._lock:
             return sorted(n for n, e in self._entries.items() if e.hot)
 
+    def hot_bytes(self) -> int:
+        """Device-placed model bytes right now (the ResourceMonitor's
+        ``resource_hot_model_bytes`` source)."""
+        with self._lock:
+            return self._hot_bytes()
+
     def describe(self) -> dict:
         """Per-model status for ``/v1/models`` and ``/statz``.  Event
         counts are a view over ``registry_model_events_total`` — the same

@@ -43,6 +43,21 @@ is unchanged since PR 6), ``/statz``, and ``GET /metrics``.  Pass a shared
 ``metrics=``/``tracer=`` pair (as ``serve_http`` does) to co-export with
 the admission controller and model registry; the default is a private pair
 per scheduler so tests and benchmark arms never share counters.
+
+Request-scoped tracing (PR 10): ``submit()`` mints (or accepts) a
+``request_id``, stamps it on the ``serve.queue`` span as its
+``trace_id``, and the ``serve.device`` span *links* every request id the
+coalesced batch served — so ``tracer.trace(rid)`` reconstructs the full
+per-request timeline (admission -> queue wait -> batch id -> device time
+-> sync) that ``GET /v1/trace/<id>`` returns.  One ``time.monotonic()``
+reading per request drives both the span start and the absolute deadline
+(``t_start=now`` on the span), so the SLO clock can never skew from the
+trace clock.  Per-priority latency objectives (``slo=``) feed
+``serving_slo_requests`` / ``serving_slo_violations`` counters — a
+request *violates* when its submit->delivery latency exceeds its
+priority's objective, or when it is dropped at the deadline — and
+resolved requests over the :class:`~repro.obs.SlowLog` threshold dump
+their linked span timeline to the slow-log JSONL.
 """
 from __future__ import annotations
 
@@ -50,10 +65,11 @@ import dataclasses
 import queue
 import threading
 import time
+import uuid
 from concurrent.futures import Future
-from typing import List, Optional
+from typing import Dict, List, Optional
 
-from repro.obs import MetricsRegistry, Tracer
+from repro.obs import MetricsRegistry, SlowLog, Tracer
 from repro.serving.admission import (CLOSED, AdmissionController,
                                      DeadlineExceeded)
 from repro.serving.registry import ModelRegistry, UnknownModel  # noqa: F401
@@ -82,6 +98,7 @@ class Request:
     enqueued_s: float = dataclasses.field(default_factory=time.monotonic)
     deadline_s: Optional[float] = None  # absolute time.monotonic()
     span: Optional[object] = None       # serve.queue span (set by submit)
+    request_id: str = ""                # trace id minted/accepted by submit
 
 
 @dataclasses.dataclass
@@ -102,7 +119,10 @@ class InflightScheduler:
                  inflight_depth: int = 2,
                  sync_resolve: bool = False,
                  metrics: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 slo: Optional[Dict[str, float]] = None,
+                 slo_error_budget: float = 0.01,
+                 slow_log: Optional[SlowLog] = None):
         self.registry = registry
         self.admission = admission or AdmissionController()
         # default row cap = the largest bucket: coalescing past it would
@@ -144,6 +164,29 @@ class InflightScheduler:
         self._m_inflight_max = m.gauge(
             "serving_inflight_max",
             "High-watermark of concurrently in-flight batches")
+        # SLO layer: objectives come from flags / module constants, never
+        # from benchmark cfg dicts (record identity must not change)
+        if slo_error_budget <= 0:
+            raise ValueError(
+                f"slo_error_budget={slo_error_budget} must be > 0")
+        self.slo = {str(k): float(v) for k, v in (slo or {}).items()}
+        self.slo_error_budget = float(slo_error_budget)
+        self.slow_log = slow_log
+        self._g_slo_objective = m.gauge(
+            "serving_slo_objective_seconds",
+            "Configured per-priority latency objective", ("priority",))
+        self._m_slo_requests = m.counter(
+            "serving_slo_requests",
+            "Requests measured against a latency objective", ("priority",))
+        self._m_slo_violations = m.counter(
+            "serving_slo_violations",
+            "Requests over their priority's latency objective "
+            "(deadline drops included)", ("priority",))
+        for prio, objective in self.slo.items():
+            if objective <= 0:
+                raise ValueError(
+                    f"slo[{prio!r}]={objective} must be > 0 seconds")
+            self._g_slo_objective.set(objective, priority=prio)
         self._seed_lock = threading.Lock()
         self._batch_seed = 0
         self._inflight_q: "queue.Queue" = queue.Queue(maxsize=self.inflight_depth)
@@ -156,7 +199,8 @@ class InflightScheduler:
     def submit(self, n: int, *, model: str = "default",
                sampler: Optional[str] = None, tenant: str = "default",
                priority: str = "interactive",
-               deadline_s: Optional[float] = None) -> Future:
+               deadline_s: Optional[float] = None,
+               request_id: Optional[str] = None) -> Future:
         """Queue a generation request; resolves to ``(X, y)``.
 
         Validation is eager: an unknown model raises
@@ -167,6 +211,11 @@ class InflightScheduler:
         also raise here: explicit backpressure, not unbounded queueing.
         ``deadline_s`` is a *relative* SLO; a request still queued when it
         lapses fails with :class:`DeadlineExceeded` before dispatch.
+
+        ``request_id`` is the trace identity (minted here when the caller
+        doesn't bring one, e.g. from an ingress header); it is stamped on
+        the returned future (``future.request_id``) and indexes the
+        request's timeline under ``tracer.trace(request_id)``.
         """
         handle = self.registry.peek(model)
         name = sampler or handle.samplers[0]
@@ -174,21 +223,35 @@ class InflightScheduler:
             raise ValueError(
                 f"model {model!r} does not serve sampler {name!r}; "
                 f"served: {list(handle.samplers)}")
+        rid = request_id or uuid.uuid4().hex[:16]
+        # one clock reading drives the span start AND the absolute
+        # deadline: deriving the deadline from a tracer-owned timestamp
+        # coupled SLO arithmetic to tracer internals (and skewed if a
+        # tracer subclass adjusted t_start)
+        now = time.monotonic()
         span = self.tracer.start(
-            "serve.queue", model=model, sampler=name, tenant=tenant,
+            "serve.queue", trace_id=rid, t_start=now,
+            model=model, sampler=name, tenant=tenant,
             priority=priority, rows=int(n))
         req = Request(int(n), name, Future(), model=model, tenant=tenant,
-                      priority=priority, enqueued_s=span.t_start,
+                      priority=priority, enqueued_s=now,
                       deadline_s=None if deadline_s is None
-                      else span.t_start + float(deadline_s),
-                      span=span)
+                      else now + float(deadline_s),
+                      span=span, request_id=rid)
+        req.future.request_id = rid
         # enqueue under the lifecycle lock: a submit racing with stop()
         # could otherwise land behind the close with no threads left to
         # serve it — the lock serialises the two, so the request either
         # precedes the drain or gets fresh threads
         with self._lifecycle_lock:
             self._start_locked()
-            self.admission.offer(req)
+            t0 = time.monotonic()
+            try:
+                self.admission.offer(req)
+            except BaseException:
+                span.end(outcome="rejected")
+                raise
+            span.attrs["admission_s"] = time.monotonic() - t0
         return req.future
 
     def start(self) -> None:
@@ -227,7 +290,11 @@ class InflightScheduler:
         ``inflight``) — but every number is derived from the same
         instruments ``GET /metrics`` exports, so the two surfaces cannot
         disagree.  The fold runs under the registry lock: one consistent
-        cut.
+        cut.  New since PR 10: an ``slo`` key (``{}`` when no objectives
+        are configured) mapping each priority to its objective, measured
+        request / violation counts, violation rate, and error-budget burn
+        (violation rate over the allowed budget; > 1.0 means the budget
+        is being spent faster than allotted).
         """
         with self.metrics.lock:
             req = self._m_requests.series()      # (sampler, tenant) -> n
@@ -239,6 +306,21 @@ class InflightScheduler:
             warm = self._m_warm.get()
             inflight = self._m_inflight.get()
             inflight_max = self._m_inflight_max.get()
+            slo_req = self._m_slo_requests.series()      # (priority,) -> n
+            slo_viol = self._m_slo_violations.series()
+        slo = {}
+        for prio, objective in sorted(self.slo.items()):
+            n = int(slo_req.get((prio,), 0))
+            v = int(slo_viol.get((prio,), 0))
+            rate = v / n if n else 0.0
+            slo[prio] = {
+                "objective_s": objective,
+                "requests": n,
+                "violations": v,
+                "violation_rate": rate,
+                "error_budget": self.slo_error_budget,
+                "budget_burn": rate / self.slo_error_budget,
+            }
         per_sampler = {}
         for s in sorted({k[0] for k in req} | {k[0] for k in dev}):
             d = dev.get((s,), _EMPTY_HIST)
@@ -273,6 +355,7 @@ class InflightScheduler:
             "per_sampler": per_sampler,
             "per_tenant": per_tenant,
             "inflight": int(inflight),
+            "slo": slo,
         }
 
     # -- bookkeeping shared with the synchronous server path -----------------
@@ -319,6 +402,11 @@ class InflightScheduler:
         if req.span is not None:
             req.span.end(outcome="deadline")
         self._m_dropped.inc()
+        # a deadline drop is the worst latency outcome there is: it burns
+        # error budget even though no latency was ever measured
+        if req.priority in self.slo:
+            self._m_slo_requests.inc(1, priority=req.priority)
+            self._m_slo_violations.inc(1, priority=req.priority)
         return True
 
     def _scheduler_loop(self) -> None:
@@ -382,17 +470,21 @@ class InflightScheduler:
             return None
         total = sum(r.n for r in batch)
         with self._seed_lock:
-            seed = BATCH_SEED_BASE + self._batch_seed
+            batch_id = self._batch_seed
+            seed = BATCH_SEED_BASE + batch_id
             self._batch_seed += 1
         # the device span opens *before* placement: acquire() may promote a
         # cold model, and that cost belongs to device time (as it did when
-        # this was a hand-stamped t0)
+        # this was a hand-stamped t0).  It *links* every request id it
+        # serves: the coalesced batch belongs to N traces at once.
+        trace_ids = tuple(r.request_id for r in batch if r.request_id)
         dspan = self.tracer.start(
-            "serve.device", model=batch[0].model, sampler=batch[0].sampler,
-            rows=total, requests=len(batch))
+            "serve.device", links=trace_ids,
+            model=batch[0].model, sampler=batch[0].sampler,
+            rows=total, requests=len(batch), batch_id=batch_id)
         for r in batch:
             if r.span is not None:
-                r.span.end()   # queue wait: submit -> claim
+                r.span.end(batch_id=batch_id)   # queue wait: submit -> claim
         try:
             handle = self.registry.acquire(batch[0].model)
             sample = handle.generate_async(total, batch[0].sampler, seed=seed)
@@ -401,6 +493,11 @@ class InflightScheduler:
             for r in batch:
                 r.future.set_exception(exc)
             return None
+        # fakes in the control-plane tests return bare handles: tag() is
+        # best-effort context for downstream tooling, not a contract
+        tag = getattr(sample, "tag", None)
+        if tag is not None:
+            tag(batch_id=batch_id, trace_ids=trace_ids)
         v = self._m_inflight.inc(1)
         self._m_inflight_max.set_max(v)
         return _Inflight(handle, sample, batch, total, dspan)
@@ -409,6 +506,7 @@ class InflightScheduler:
         """Block on the device values, deliver per-request slices, account
         queue-wait vs device-time from the batch's spans."""
         batch = inflight.batch
+        t_sync = time.monotonic()
         try:
             X, y = inflight.sample.result()
         except BaseException as exc:  # noqa: BLE001 — delivered via futures
@@ -417,11 +515,13 @@ class InflightScheduler:
                 r.future.set_exception(exc)
             self._m_inflight.dec(1)
             return
-        dt = inflight.span.end()
+        dt = inflight.span.end(sync_s=time.monotonic() - t_sync,
+                               outcome="ok")
         off = 0
         for r in batch:
             r.future.set_result((X[off:off + r.n], y[off:off + r.n]))
             off += r.n
+        now = time.monotonic()
         sampler = batch[0].sampler
         with self.metrics.lock:
             self._m_inflight.dec(1)
@@ -434,6 +534,30 @@ class InflightScheduler:
                         else inflight.span.t_start - r.enqueued_s)
                 self._h_queue_wait.observe(wait, sampler=sampler,
                                            tenant=r.tenant)
+                if r.priority in self.slo:
+                    self._m_slo_requests.inc(1, priority=r.priority)
+                    if now - r.enqueued_s > self.slo[r.priority]:
+                        self._m_slo_violations.inc(1, priority=r.priority)
+        # slow-log writes after delivery, outside the metrics lock: file
+        # I/O must never serialise the accounting hot path
+        if self.slow_log is not None:
+            for r in batch:
+                lat = now - r.enqueued_s
+                if lat <= self.slow_log.threshold_s:
+                    continue
+                spans = [r.span.to_dict()] if r.span is not None else []
+                spans.append(inflight.span.to_dict())
+                self.slow_log.record({
+                    "request_id": r.request_id,
+                    "latency_s": lat,
+                    "model": r.model,
+                    "sampler": sampler,
+                    "tenant": r.tenant,
+                    "priority": r.priority,
+                    "rows": r.n,
+                    "batch_id": inflight.span.attrs.get("batch_id"),
+                    "spans": spans,
+                })
 
     def serve_batch_sync(self, batch: List[Request]) -> None:
         """Dispatch + resolve one pre-formed batch on the calling thread —

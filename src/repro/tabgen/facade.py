@@ -31,7 +31,9 @@ from repro.tabgen.sampling import sample_async as _sample_async
 
 
 class _DecodingHandle:
-    """Schema-aware wrapper over an in-flight sample: decode on resolve."""
+    """Schema-aware wrapper over an in-flight sample: decode on resolve.
+    Trace context (``tag``/``batch_id``/``trace_ids``) passes through to
+    the wrapped :class:`~repro.tabgen.sampling.SampleHandle`."""
 
     def __init__(self, handle, schema: TabularSchema):
         self._handle = handle
@@ -40,6 +42,18 @@ class _DecodingHandle:
     def result(self):
         X, y = self._handle.result()
         return self._schema.decode(X), y
+
+    def tag(self, **kwargs):
+        self._handle.tag(**kwargs)
+        return self
+
+    @property
+    def batch_id(self):
+        return self._handle.batch_id
+
+    @property
+    def trace_ids(self):
+        return self._handle.trace_ids
 
 
 class TabularGenerator:

@@ -24,7 +24,7 @@ resolved per call (argument > ``ForestConfig.predict_impl`` >
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -153,6 +153,18 @@ class SampleHandle:
         self._per_class = per_class
         self._classes = classes
         self._rng = rng
+        # trace context, stamped by the serving scheduler via tag(): which
+        # coalesced batch this dispatch is, and which request traces ride it
+        self.batch_id: Optional[int] = None
+        self.trace_ids: Tuple[str, ...] = ()
+
+    def tag(self, *, batch_id: Optional[int] = None,
+            trace_ids: Sequence[str] = ()) -> "SampleHandle":
+        """Attach serving trace context (best-effort metadata; never read
+        by the sampling math).  Returns self for chaining."""
+        self.batch_id = batch_id
+        self.trace_ids = tuple(trace_ids)
+        return self
 
     def result(self) -> Tuple[np.ndarray, np.ndarray]:
         x_all = np.asarray(self._x_dev)             # blocks: [n_y, m, p]

@@ -521,6 +521,154 @@ def test_baseline_file_shape(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# OB001 — span leaks (unended Tracer.start spans never record)
+# ---------------------------------------------------------------------------
+
+def test_ob001_early_return_leaks_span():
+    # the motivating bug shape: validation bails before the span ends
+    src = """
+        def submit(self, n, ok):
+            sp = self.tracer.start("serve.queue", rows=n)
+            if not ok:
+                return None
+            sp.end()
+    """
+    fs = findings(src, select=("OB001",))
+    assert [f.rule for f in fs] == ["OB001"]
+    assert "every path" in fs[0].message
+    assert "tracer.span(" in fs[0].message  # suggests the context manager
+
+
+def test_ob001_never_ended_flags():
+    assert rules_hit("""
+        def f(tracer):
+            sp = tracer.start("x")
+            do_work()
+    """, select=("OB001",)) == ["OB001"]
+
+
+def test_ob001_raise_arm_without_end_flags():
+    assert rules_hit("""
+        def f(tracer, ok):
+            sp = tracer.start("x")
+            if not ok:
+                raise ValueError("no")
+            sp.end()
+    """, select=("OB001",)) == ["OB001"]
+
+
+def test_ob001_swallowing_handler_flags():
+    # body ends the span but the except arm falls through without ending
+    assert rules_hit("""
+        def f(tracer):
+            sp = tracer.start("x")
+            try:
+                work()
+                sp.end()
+            except Exception:
+                pass
+    """, select=("OB001",)) == ["OB001"]
+
+
+def test_ob001_end_only_inside_loop_flags():
+    # zero iterations is always a possible path
+    assert rules_hit("""
+        def f(tracer, items):
+            sp = tracer.start("x")
+            for it in items:
+                sp.end()
+    """, select=("OB001",)) == ["OB001"]
+
+
+def test_ob001_clean_shapes_pass():
+    good = [
+        # the suggested fix: scoped context manager
+        """
+        def f(tracer):
+            with tracer.span("x") as sp:
+                work(sp)
+        """,
+        # try/finally always ends
+        """
+        def f(tracer):
+            sp = tracer.start("x")
+            try:
+                work()
+            finally:
+                sp.end()
+        """,
+        # both branches end (with distinct outcomes)
+        """
+        def f(tracer, ok):
+            sp = tracer.start("x")
+            if ok:
+                sp.end(outcome="ok")
+            else:
+                sp.end(outcome="bad")
+        """,
+        # end-then-terminate in the early arm is fine
+        """
+        def f(tracer, ok):
+            sp = tracer.start("x")
+            if not ok:
+                sp.end(outcome="rejected")
+                return None
+            sp.end()
+        """,
+        # handler ends before re-raising
+        """
+        def f(tracer):
+            sp = tracer.start("x")
+            try:
+                work()
+                sp.end()
+            except Exception:
+                sp.end(outcome="error")
+                raise
+        """,
+    ]
+    for src in good:
+        assert rules_hit(src, select=("OB001",)) == [], src
+
+
+def test_ob001_escaped_spans_are_not_flagged():
+    # ownership moved: the scheduler pattern (span rides a Request /
+    # _Inflight record and is ended by another thread)
+    escapes = [
+        """
+        def submit(self):
+            sp = self.tracer.start("serve.queue")
+            req = Request(span=sp)
+            self.admission.offer(req)
+        """,
+        """
+        def dispatch(self, batch):
+            dspan = self.tracer.start("serve.device")
+            return Inflight(batch, dspan)
+        """,
+    ]
+    for src in escapes:
+        assert rules_hit(src, select=("OB001",)) == [], src
+
+
+def test_ob001_closure_end_and_foreign_receivers_skip():
+    # end inside a nested def = closure owns the span: out of scope
+    assert rules_hit("""
+        def f(tracer):
+            sp = tracer.start("x")
+            def cb():
+                sp.end()
+            register(cb)
+    """, select=("OB001",)) == []
+    # receiver must *look like* a tracer: thread/pool .start() never match
+    assert rules_hit("""
+        def f(self):
+            t = self.pool.start("worker")
+            h = self.thread.start()
+    """, select=("OB001",)) == []
+
+
+# ---------------------------------------------------------------------------
 # CLI contract
 # ---------------------------------------------------------------------------
 
@@ -559,7 +707,7 @@ def test_cli_write_baseline_grandfathers(tmp_path):
 def test_cli_lists_all_rules():
     r = run_cli("--list-rules", cwd=REPO)
     assert r.returncode == 0
-    for rule_id in ("JX001", "JX002", "JX003", "TH001", "PL001"):
+    for rule_id in ("JX001", "JX002", "JX003", "TH001", "PL001", "OB001"):
         assert rule_id in r.stdout
 
 

@@ -11,7 +11,7 @@ import pytest
 
 from repro.config import ForestConfig
 from repro.data.tabular import two_moons
-from repro.obs import (CONTENT_TYPE, MetricsRegistry, Tracer,
+from repro.obs import (CONTENT_TYPE, MetricsRegistry, SlowLog, Tracer,
                        render_prometheus)
 from repro.obs.metrics import DEFAULT_BUCKETS
 from repro.serving import AdmissionController, ModelRegistry
@@ -270,6 +270,65 @@ def test_span_jsonl_export(tmp_path):
     rec = json.loads(path.read_text().splitlines()[0])
     assert rec["name"] == "a" and rec["attrs"] == {"k": "v"}
     assert rec["duration_s"] >= 0.0 and rec["parent_id"] is None
+
+
+def test_span_jsonl_export_append_vs_truncate(tmp_path):
+    """Default export truncates (a fresh snapshot of the ring); append=True
+    accumulates — the mode periodic exporters and bench artifacts use."""
+    tr = Tracer()
+    with tr.span("a"):
+        pass
+    path = str(tmp_path / "spans.jsonl")
+    assert tr.export_jsonl(path) == 1
+    assert tr.export_jsonl(path) == 1            # truncate: same 1 line
+    assert len(open(path).read().splitlines()) == 1
+    assert tr.export_jsonl(path, append=True) == 1
+    lines = open(path).read().splitlines()
+    assert len(lines) == 2                       # append: accumulates
+    assert all(json.loads(ln)["name"] == "a" for ln in lines)
+
+
+def test_trace_index_returns_request_timeline_sorted():
+    """tracer.trace(id) stitches the queue span (trace_id) and the device
+    span (links) into one timeline, ordered by start time."""
+    tr = Tracer()
+    dev = tr.start("serve.device", links=("r1", "r2"), t_start=5.0)
+    q1 = tr.start("serve.queue", trace_id="r1", t_start=1.0)
+    q1.end()
+    dev.end()
+    tl = tr.trace("r1")
+    assert [s.name for s in tl] == ["serve.queue", "serve.device"]
+    assert tl[0] is q1 and tl[1] is dev
+    assert [s.name for s in tr.trace("r2")] == ["serve.device"]
+    assert tr.trace("nope") == []
+
+
+def test_trace_index_evicts_with_ring():
+    """Ring eviction drops the by-trace index too — an evicted request id
+    resolves to nothing rather than leaking span references forever."""
+    tr = Tracer(capacity=2)
+    for i in range(4):
+        with tr.span("s", trace_id=f"r{i}"):
+            pass
+    assert tr.trace("r0") == [] and tr.trace("r1") == []
+    assert len(tr.trace("r2")) == 1 and len(tr.trace("r3")) == 1
+
+
+def test_slow_log_always_appends_and_creates_eagerly(tmp_path):
+    import os
+    path = str(tmp_path / "slow.jsonl")
+    slow = SlowLog(path, threshold_s=0.5)
+    assert os.path.exists(path)                  # eager create: empty file
+    assert open(path).read() == ""               # "no slow requests" state
+    slow.record({"request_id": "b", "latency_s": 0.9})
+    assert slow.written == 1
+    # a second SlowLog on the same path appends — restart-safe capture
+    slow2 = SlowLog(path, threshold_s=0.5)
+    slow2.record({"request_id": "c", "latency_s": 2.0})
+    recs = [json.loads(ln) for ln in open(path).read().splitlines()]
+    assert [r["request_id"] for r in recs] == ["b", "c"]
+    with pytest.raises(ValueError):
+        SlowLog(str(tmp_path / "x.jsonl"), threshold_s=-1.0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,324 @@
+"""End-to-end tests for PR-10 request-scoped observability: trace-context
+propagation over real HTTP (X-Repro-Request-Id -> /v1/trace/<id>), batch
+links, SLO accounting, slow-request capture, resource telemetry, and the
+bounded profiling endpoint."""
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.config import ForestConfig
+from repro.data.tabular import two_moons
+from repro.obs import (MetricsRegistry, ProfileInProgress, Profiler,
+                       ResourceMonitor, SlowLog, Tracer)
+from repro.serving import AdmissionController, ModelRegistry, QueueFull
+from repro.tabgen import fit_artifacts
+
+
+@pytest.fixture(scope="module")
+def moons_artifacts():
+    X, y = two_moons(300, seed=0)
+    fcfg = ForestConfig(method="flow", n_t=6, duplicate_k=8, n_trees=10,
+                        max_depth=3, n_bins=16, reg_lambda=1.0)
+    return fit_artifacts(X, y, fcfg, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# HTTP plane with the full observability stack wired in
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_plane(moons_artifacts, tmp_path_factory):
+    from repro.launch.serve_http import ServingApp, serve_in_thread
+    tmp = tmp_path_factory.mktemp("tracing")
+    metrics, tracer = MetricsRegistry(), Tracer()
+    registry = ModelRegistry(buckets=(64,), metrics=metrics)
+    registry.register("moons", moons_artifacts, samplers=("euler",))
+    admission = AdmissionController(metrics=metrics)
+    # threshold 0.0: every resolved request is "slow" — deterministic capture
+    slow = SlowLog(str(tmp / "slow.jsonl"), threshold_s=0.0)
+    app = ServingApp(
+        registry, admission, metrics=metrics, tracer=tracer,
+        # 1e-9 interactive objective: every request violates (objectives
+        # must be > 0, so this is the deterministic always-violate setting)
+        slo={"interactive": 1e-9, "bulk": 10.0},
+        slow_log=slow,
+        profiler=Profiler(str(tmp / "profiles"), max_seconds=5.0),
+        monitor=ResourceMonitor(metrics, interval_s=60.0,
+                                admission=admission, registry=registry))
+    registry.warmup()
+    app.monitor.sample()
+    httpd, thread = serve_in_thread(app)
+    host, port = httpd.server_address[:2]
+    yield app, tracer, f"http://{host}:{port}", slow
+    httpd.shutdown()
+    httpd.server_close()
+    app.stop()
+    thread.join(timeout=10)
+
+
+def _req(method, url, body=None, headers=()):
+    hdrs = {"Content-Type": "application/json"}
+    hdrs.update(dict(headers))
+    req = urllib.request.Request(
+        url, method=method,
+        data=None if body is None else json.dumps(body).encode(),
+        headers=hdrs)
+    try:
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            return resp.status, dict(resp.headers), json.load(resp)
+    except urllib.error.HTTPError as err:
+        return err.code, dict(err.headers), json.load(err)
+
+
+def test_request_id_header_resolves_to_timeline(traced_plane):
+    """The tentpole round trip: the id minted at ingress comes back in the
+    response header, resolves via /v1/trace/<id> to a queue+device
+    timeline, and that timeline reconciles with /statz aggregates.
+
+    Runs first in this module, so this request is the plane's first — its
+    single timeline must BE the scheduler totals exactly (same spans feed
+    both views)."""
+    _, _, base, _ = traced_plane
+    status, headers, body = _req("POST", f"{base}/v1/generate",
+                                 {"model": "moons", "n": 48, "tenant": "t0",
+                                  "priority": "interactive"})
+    assert status == 200 and len(body["rows"]) == 48
+    rid = headers["X-Repro-Request-Id"]
+    assert rid and rid == body["request_id"]
+
+    status, _, tl = _req("GET", f"{base}/v1/trace/{rid}")
+    assert status == 200
+    names = [s["name"] for s in tl["spans"]]
+    assert names == ["serve.queue", "serve.device"]
+    q, dev = tl["spans"]
+    assert q["trace_id"] == rid and rid in dev["links"]
+    assert q["attrs"]["batch_id"] == dev["attrs"]["batch_id"]
+    s = tl["summary"]
+    assert s["model"] == "moons" and s["tenant"] == "t0"
+    assert s["rows"] == 48
+    assert s["queue_wait_s"] >= 0.0 and s["admission_s"] >= 0.0
+    assert s["queue_depth"] >= 1
+    assert s["batch"]["rows"] == 48 and s["batch"]["requests"] == 1
+    assert s["batch"]["outcome"] == "ok"
+
+    status, _, statz = _req("GET", f"{base}/statz")
+    assert status == 200
+    sched = statz["scheduler"]
+    assert abs(q["duration_s"] - sched["queue_wait_s"]) < 1e-9
+    assert abs(dev["duration_s"] - sched["device_s"]) < 1e-9
+
+
+def test_unknown_trace_id_404_and_errors_carry_request_id(traced_plane):
+    _, _, base, _ = traced_plane
+    status, _, body = _req("GET", f"{base}/v1/trace/deadbeef")
+    assert status == 404 and "deadbeef" in body["error"]
+    # error responses are addressable too: the id is minted before
+    # validation, so a 400 still carries the trace handle
+    status, headers, body = _req("POST", f"{base}/v1/generate",
+                                 {"model": "moons", "n": 0})
+    assert status == 400
+    assert headers["X-Repro-Request-Id"] == body["request_id"]
+
+
+def test_slo_violations_and_slow_log_capture(traced_plane):
+    """With a 1e-9 interactive objective every resolved request violates;
+    the violation shows in /statz (budget burn) and /metrics (counter),
+    and the slow log has the request's full span timeline."""
+    _, _, base, slow = traced_plane
+    status, _, body = _req("POST", f"{base}/v1/generate",
+                           {"model": "moons", "n": 8})
+    assert status == 200
+    rid = body["request_id"]
+    status, _, statz = _req("GET", f"{base}/statz")
+    slo = statz["scheduler"]["slo"]
+    assert slo["interactive"]["objective_s"] == pytest.approx(1e-9)
+    assert slo["interactive"]["violations"] >= 1
+    assert slo["interactive"]["violation_rate"] == 1.0
+    assert slo["interactive"]["budget_burn"] >= 1.0
+    assert slo["bulk"]["requests"] == 0          # objective present, unused
+    with urllib.request.urlopen(f"{base}/metrics", timeout=60) as r:
+        prom = r.read().decode()
+    assert 'serving_slo_violations_total{priority="interactive"}' in prom
+    assert "serving_slo_objective_seconds" in prom
+    # slow log: threshold 0.0 captures everything, spans ride along
+    recs = [json.loads(ln) for ln in open(slow.path).read().splitlines()]
+    mine = [r for r in recs if r["request_id"] == rid]
+    assert len(mine) == 1 and mine[0]["latency_s"] > 0.0
+    assert {s["name"] for s in mine[0]["spans"]} == {"serve.queue",
+                                                     "serve.device"}
+    assert slow.written == len(recs)
+
+
+def test_resource_gauges_on_metrics_endpoint(traced_plane):
+    _, _, base, _ = traced_plane
+    with urllib.request.urlopen(f"{base}/metrics", timeout=60) as r:
+        prom = r.read().decode()
+    assert "resource_rss_bytes" in prom
+    assert "resource_samples_total" in prom
+    rss = next(float(ln.rsplit(" ", 1)[1]) for ln in prom.splitlines()
+               if ln.startswith("resource_rss_bytes "))
+    assert rss > 0
+
+
+def test_concurrent_scrapes_during_traffic(traced_plane):
+    """/metrics and /statz stay consistent 200s while generates hammer the
+    plane from other threads — the one-registry lock story under load."""
+    _, _, base, _ = traced_plane
+    stop = threading.Event()
+    errors = []
+
+    def hammer():
+        while not stop.is_set():
+            status, _, _ = _req("POST", f"{base}/v1/generate",
+                                {"model": "moons", "n": 8})
+            if status != 200:
+                errors.append(("generate", status))
+
+    def scrape(path):
+        while not stop.is_set():
+            try:
+                with urllib.request.urlopen(base + path, timeout=60) as r:
+                    if r.status != 200:
+                        errors.append((path, r.status))
+                    r.read()
+            except Exception as e:               # noqa: BLE001
+                errors.append((path, repr(e)))
+
+    threads = ([threading.Thread(target=hammer) for _ in range(2)]
+               + [threading.Thread(target=scrape, args=("/metrics",)),
+                  threading.Thread(target=scrape, args=("/statz",))])
+    for t in threads:
+        t.start()
+    time.sleep(1.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors[:5]
+
+
+def test_profile_endpoint_overlap_disabled_and_admin(traced_plane):
+    app, _, base, _ = traced_plane
+    done = {}
+
+    def long_capture():
+        done.update(_req("POST", f"{base}/debug/profile",
+                         {"duration_ms": 800})[2])
+
+    t = threading.Thread(target=long_capture)
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while not app.profiler.active:               # wait for capture to start
+        assert time.monotonic() < deadline, "profile capture never started"
+        time.sleep(0.01)
+    status, _, body = _req("POST", f"{base}/debug/profile",
+                           {"duration_ms": 100})
+    assert status == 409 and "already running" in body["error"]
+    t.join(timeout=60)
+    assert done["duration_s"] == pytest.approx(0.8) and done["dir"]
+    # bad duration -> 400
+    status, _, _ = _req("POST", f"{base}/debug/profile", {"duration_ms": -5})
+    assert status == 400
+    # admin guard: with a token configured, the header is required
+    app.admin_token = "s3cret"
+    try:
+        status, _, body = _req("POST", f"{base}/debug/profile",
+                               {"duration_ms": 50})
+        assert status == 401
+        status, _, _ = _req("POST", f"{base}/debug/profile",
+                            {"duration_ms": 50},
+                            headers={"X-Repro-Admin-Token": "s3cret"})
+        assert status == 200
+    finally:
+        app.admin_token = None
+    # disabled plane (no --profile-dir) -> 403
+    saved, app.profiler = app.profiler, None
+    try:
+        status, _, body = _req("POST", f"{base}/debug/profile",
+                               {"duration_ms": 50})
+        assert status == 403 and "disabled" in body["error"]
+    finally:
+        app.profiler = saved
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level: batch links, one-clock deadlines
+# ---------------------------------------------------------------------------
+
+def test_coalesced_batch_links_every_request(moons_artifacts):
+    """Two requests coalesced into one dispatch: the serve.device span
+    links BOTH request ids, and each id's timeline shares the batch_id."""
+    from repro.launch.serve_forest import ForestServer
+    server = ForestServer(moons_artifacts, buckets=(64,),
+                          coalesce_window_s=2.0)
+    server.warmup()
+    try:
+        f1 = server.submit(32)
+        f2 = server.submit(32)
+        for f in (f1, f2):
+            X, _ = f.result(timeout=120)
+            assert len(X) == 32
+        r1, r2 = f1.request_id, f2.request_id
+        assert r1 != r2
+        dev = server.tracer.spans(name="serve.device")
+        assert len(dev) == 1                     # one coalesced dispatch
+        assert set(dev[0].links) == {r1, r2}
+        tl1, tl2 = server.tracer.trace(r1), server.tracer.trace(r2)
+        assert [s.name for s in tl1] == ["serve.queue", "serve.device"]
+        assert tl1[1] is dev[0] and tl2[1] is dev[0]
+        assert (tl1[0].attrs["batch_id"] == tl2[0].attrs["batch_id"]
+                == dev[0].attrs["batch_id"])
+    finally:
+        server.stop()
+
+
+class _SkewedTracer(Tracer):
+    """Backdates spans it owns the timestamp for — a regression guard that
+    the scheduler's deadline math never borrows tracer-owned time."""
+
+    def start(self, name, *, t_start=None, **kw):
+        if t_start is None:
+            t_start = time.monotonic() - 999.0
+        return super().start(name, t_start=t_start, **kw)
+
+
+class _SpyAdmission(AdmissionController):
+    """Records the offered request, then rejects it."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.seen = []
+
+    def offer(self, req):
+        self.seen.append(req)
+        raise QueueFull("spy: rejecting everything", retry_after_s=0.1)
+
+
+def test_deadline_and_span_share_one_clock_reading(moons_artifacts):
+    """submit() takes ONE monotonic reading for the span start and the
+    absolute deadline. A tracer that skews timestamps it owns must not be
+    able to move the deadline (the PR-10 one-clock fix)."""
+    from repro.serving import InflightScheduler
+    metrics, tracer = MetricsRegistry(), _SkewedTracer()
+    registry = ModelRegistry(buckets=(64,), metrics=metrics)
+    registry.register("moons", moons_artifacts, samplers=("euler",))
+    spy = _SpyAdmission(metrics=metrics)
+    sched = InflightScheduler(registry, spy, metrics=metrics, tracer=tracer)
+    try:
+        before = time.monotonic()
+        with pytest.raises(QueueFull):
+            sched.submit(8, model="moons", deadline_s=1.5)
+        after = time.monotonic()
+        (req,) = spy.seen
+        # one reading: deadline - enqueue is EXACTLY the relative SLO, and
+        # the queue span starts at that same reading (not the skewed time)
+        assert req.deadline_s == req.enqueued_s + 1.5
+        assert req.span.t_start == req.enqueued_s
+        assert before <= req.enqueued_s <= after  # sane, un-skewed clock
+        assert req.span.attrs["outcome"] == "rejected"
+    finally:
+        sched.stop()
